@@ -1,0 +1,76 @@
+"""Tables 2/3 "Communication" column analogue, measured structurally: the
+per-device collective bytes each algorithm's train step puts on the wire,
+from the jaxpr cost walker on a (2 data × 2 model) debug mesh.
+
+This is the CPU-only stand-in for the paper's wall-clock comparison: on
+fixed hardware, all-reduce-able int8 beats all-reduce f32 beats all-gather —
+the BYTES ordering here is exactly the paper's TIME ordering.
+
+Runs itself in a subprocess with 4 forced host devices so the parent
+process' single-device view is untouched.  CSV: name,us_per_call,derived
+(us_per_call column carries dp_bytes; derived carries total collective
+bytes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, json
+sys.path.insert(0, os.path.join(os.path.dirname(r"%(repo)s"), "%(repo_tail)s", "src"))
+sys.path.insert(0, r"%(repo)s/src")
+sys.path.insert(0, r"%(repo)s")
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, smoke_config, ShapeConfig
+from repro.core import make_compressor
+from repro.launch.step import build_train_step
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from benchmarks.jaxpr_cost import analyze, summarize
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+shape = ShapeConfig("t", 64, 8, "train")
+cfg = smoke_config(get_arch("granite-8b"))
+out = {}
+for name in ["none", "allgather_sgd", "intsgd", "intsgd8", "heuristic_intsgd",
+             "powersgd", "signsgd", "qsgd", "natsgd", "intdiana"]:
+    art = build_train_step(cfg, mesh, shape, compressor=make_compressor(name),
+                           base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1))
+    s = summarize(analyze(art.jitted["compressed"], *art.arg_structs))
+    out[name] = {"dp": s["dp_bytes"], "tp": s["tp_bytes"],
+                 "total": s["collective_bytes"], "dp_int": s["dp_int_bytes"]}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def main(emit=print):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    code = _CHILD % {"repo": repo, "repo_tail": os.path.basename(repo)}
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=900, env=env, cwd=repo,
+    )
+    if r.returncode != 0:
+        emit(f"bench_comm_volume/ERROR,0,{r.stderr[-200:]!r}")
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            out = json.loads(line[len("RESULT "):])
+            base = out["none"]["dp"]
+            for name, v in out.items():
+                ratio = base / max(v["dp"], 1)
+                emit(
+                    f"comm_volume/{name},{v['dp']:.0f},total={v['total']:.0f}"
+                    f";dp_int={v['dp_int']:.0f};dp_compression_vs_sgd={ratio:.2f}x"
+                )
+
+
+if __name__ == "__main__":
+    main()

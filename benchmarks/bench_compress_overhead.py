@@ -1,0 +1,113 @@
+"""Tables 2/3 "Computation Overhead" column analogue: wall-clock of the
+compression/decompression computation per algorithm on a fixed gradient
+payload, plus the Pallas fused kernels vs their unfused jnp chains.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounding
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(emit=print):
+    key = jax.random.PRNGKey(0)
+    d = 1_000_000
+    g = jax.random.normal(key, (d,))
+    alpha = jnp.float32(1000.0)
+
+    # IntSGD encode: scale+round+clip+cast
+    enc = jax.jit(
+        lambda x, k: rounding.encode(x, alpha, k, n_workers=16, bits=32)
+    )
+    us = _time(enc, g, key)
+    emit(f"compress/intsgd_encode_jnp,{us:.0f},{d}")
+
+    enc8 = jax.jit(
+        lambda x, k: rounding.encode(x, alpha, k, n_workers=16, bits=8)
+    )
+    us = _time(enc8, g, key)
+    emit(f"compress/intsgd_encode_int8_jnp,{us:.0f},{d}")
+
+    encd = jax.jit(
+        lambda x: rounding.encode(x, alpha, None, n_workers=16, bits=32, stochastic=False)
+    )
+    us = _time(encd, g)
+    emit(f"compress/intsgd_encode_determ,{us:.0f},{d}")
+
+    # Pallas kernel (interpret mode on CPU — the TPU path is the target;
+    # this row validates the dispatch overhead, not TPU speed)
+    usk = _time(
+        lambda x, k: ops.int_compress(x, alpha, k, n_workers=16, bits=32), g, key,
+        iters=3,
+    )
+    emit(f"compress/intsgd_encode_pallas_interp,{usk:.0f},{d}")
+
+    # decode + fused optimizer update
+    ints = enc(g, key)
+    mom = jnp.zeros_like(g)
+    naive = jax.jit(
+        lambda s, p, m: (
+            p - 0.1 * (0.9 * m + (s.astype(jnp.float32) / (16 * alpha) + 1e-4 * p)),
+            0.9 * m + (s.astype(jnp.float32) / (16 * alpha) + 1e-4 * p),
+        )
+    )
+    us = _time(naive, ints, g, mom)
+    emit(f"compress/decode_update_unfused_jnp,{us:.0f},{d}")
+    usk = _time(
+        lambda s, p, m: ops.fused_update(s, p, m, 1.0 / (16 * alpha), 0.1, 0.9, 1e-4),
+        ints, g, mom, iters=3,
+    )
+    emit(f"compress/decode_update_pallas_interp,{usk:.0f},{d}")
+
+    # QSGD-style per-bucket quantization (for the overhead comparison row)
+    def qsgd_enc(x, k):
+        norm = jnp.linalg.norm(x) + 1e-30
+        s = jnp.abs(x) / norm * 64
+        lo = jnp.floor(s)
+        u = jax.random.uniform(k, x.shape)
+        return (lo + (u < s - lo)).astype(jnp.int8), jnp.sign(x).astype(jnp.int8), norm
+
+    us = _time(jax.jit(qsgd_enc), g, key)
+    emit(f"compress/qsgd_encode,{us:.0f},{d}")
+
+    # NatSGD exponent rounding
+    def nat_enc(x, k):
+        mag = jnp.maximum(jnp.abs(x), 1e-38)
+        e = jnp.floor(jnp.log2(mag))
+        u = jax.random.uniform(k, x.shape)
+        return (e + (u < mag / jnp.exp2(e) - 1)).astype(jnp.int8)
+
+    us = _time(jax.jit(nat_enc), g, key)
+    emit(f"compress/natsgd_encode,{us:.0f},{d}")
+
+    # PowerSGD rank-2 compress (matrix reshaped)
+    m2 = g.reshape(1000, 1000)
+    q = jax.random.normal(key, (1000, 2))
+
+    def pow_enc(mm, qq):
+        p = mm @ qq
+        ph, _ = jnp.linalg.qr(p)
+        return ph, mm.T @ ph
+
+    us = _time(jax.jit(pow_enc), m2, q)
+    emit(f"compress/powersgd_rank2,{us:.0f},{d}")
+
+
+if __name__ == "__main__":
+    main()

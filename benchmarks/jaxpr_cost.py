@@ -1,0 +1,215 @@
+"""Exact structural cost model: walk the jaxpr, multiply through scan trip
+counts, and account FLOPs + unfused bytes + per-collective bytes.
+
+Why not compiled.cost_analysis()? XLA counts a while-loop body ONCE — with
+scan-over-layers every per-layer matmul, byte and collective is undercounted
+by ~n_layers ×. This walker multiplies by scan `length`, giving the true
+per-device totals the roofline needs. (EXPERIMENTS.md §Dry-run reports both
+and the ratio.)
+
+Collectives are tagged by mesh axis so the table separates
+  * TP bytes  (psum over "model" — activation reductions),
+  * DP bytes  (psum over ("pod","data") — the gradient wire IntSGD shrinks;
+    reported per-dtype so int8/int32 vs f32 is visible).
+
+FLOP conventions: dot_general = 2·M·N·K·batch; elementwise = 1/output elem;
+reductions = input size. Bytes = operands+outputs per eqn (unfused upper
+bound; fusion on TPU lowers the true HBM traffic — the roofline memory term
+is therefore conservative, consistently across §Perf iterations).
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+_COLLECTIVES = {
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "psum_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+}
+
+_CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
+               "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "remat2",
+               "checkpoint", "custom_lin")
+
+
+def _size_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _nelem(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+class Cost:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0  # unfused upper bound (every eqn's operands+outputs)
+        self.bytes_fused = 0.0  # post-fusion estimate: only matmuls, gathers,
+        # scatters, scan boundaries and collectives touch HBM; elementwise
+        # chains fuse into their producers on TPU
+        self.coll = defaultdict(float)  # (kind, axes, dtype) -> bytes
+
+    def scaled(self, k):
+        c = Cost()
+        c.flops = self.flops * k
+        c.bytes = self.bytes * k
+        c.bytes_fused = self.bytes_fused * k
+        for key, v in self.coll.items():
+            c.coll[key] = v * k
+        return c
+
+    def add(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.bytes_fused += other.bytes_fused
+        for key, v in other.coll.items():
+            self.coll[key] += v
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        s for i, s in enumerate(lhs.shape) if i not in set(lc) | set(lb)
+    )
+    n = math.prod(
+        s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb)
+    )
+    return 2.0 * batch * m * n * contract
+
+
+def _axes_of(eqn):
+    p = eqn.params
+    for k in ("axes", "axis_name", "axis_names"):
+        if k in p:
+            a = p[k]
+            if isinstance(a, (tuple, list, frozenset, set)):
+                return tuple(sorted(str(x) for x in a))
+            return (str(a),)
+    return ("?",)
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    cost = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        # ---- recursion into sub-jaxprs ----
+        if name == "scan":
+            inner = jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            cost.add(inner.scaled(eqn.params["length"]))
+            continue
+        if name == "while":
+            # no unbounded whiles in this codebase; count once
+            cost.add(jaxpr_cost(eqn.params["body_jaxpr"].jaxpr))
+            continue
+        if name == "cond":
+            branches = [jaxpr_cost(b.jaxpr) for b in eqn.params["branches"]]
+            worst = max(branches, key=lambda c: c.flops + c.bytes, default=None)
+            if worst:
+                cost.add(worst)
+            continue
+        if name == "shard_map":
+            cost.add(jaxpr_cost(eqn.params["jaxpr"]))
+            continue
+        sub = None
+        for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            if k in eqn.params:
+                sub = eqn.params[k]
+                break
+        if sub is not None:
+            cost.add(jaxpr_cost(sub.jaxpr if hasattr(sub, "jaxpr") else sub))
+            continue
+
+        # ---- collectives ----
+        if name in _COLLECTIVES:
+            kind = _COLLECTIVES[name]
+            axes = _axes_of(eqn)
+            for v in eqn.invars:
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                    b = _size_bytes(v.aval)
+                    cost.coll[(kind, axes, str(v.aval.dtype))] += b
+                    cost.bytes += 2 * b  # read + write through HBM
+                    cost.bytes_fused += 2 * b
+            continue
+
+        # ---- compute ----
+        out_elems = sum(_nelem(v.aval) for v in eqn.outvars if hasattr(v, "aval"))
+        in_bytes = sum(
+            _size_bytes(v.aval)
+            for v in eqn.invars
+            if hasattr(v, "aval") and hasattr(v.aval, "shape")
+        )
+        out_bytes = sum(
+            _size_bytes(v.aval) for v in eqn.outvars if hasattr(v, "aval")
+        )
+        if name == "dot_general":
+            cost.flops += _dot_flops(eqn)
+            cost.bytes_fused += in_bytes + out_bytes
+        elif name in ("gather", "scatter", "scatter_add", "dynamic_slice",
+                      "dynamic_update_slice", "sort", "top_k", "iota"):
+            cost.bytes_fused += in_bytes + out_bytes
+        elif name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                      "argmax", "argmin", "cumsum", "cumlogsumexp"):
+            cost.flops += sum(
+                _nelem(v.aval) for v in eqn.invars if hasattr(v, "aval")
+            )
+        elif name in ("exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                      "sin", "cos", "pow", "integer_pow", "div", "add", "sub",
+                      "mul", "max", "min", "select_n", "floor", "round",
+                      "clamp", "sign", "and", "or", "xor", "shift_right_logical",
+                      "shift_left", "lt", "le", "gt", "ge", "eq", "ne",
+                      "convert_element_type", "neg", "abs", "log1p", "expm1"):
+            cost.flops += out_elems
+        cost.bytes += in_bytes + out_bytes
+    return cost
+
+
+def analyze(fn, *args):
+    """Trace fn abstractly and return the structural Cost (per device if fn
+    is a shard_map'd step on local shapes; the caller passes global jit fn —
+    shard_map bodies see local shapes, so the walk is per-device)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return jaxpr_cost(closed.jaxpr)
+
+
+def summarize(cost: Cost) -> dict:
+    by_kind = defaultdict(float)
+    tp_bytes = 0.0
+    dp_bytes = 0.0
+    dp_int_bytes = 0.0
+    for (kind, axes, dtype), b in cost.coll.items():
+        by_kind[kind] += b
+        if axes == ("model",):
+            tp_bytes += b
+        else:
+            dp_bytes += b
+            if dtype.startswith("int") or dtype.startswith("uint"):
+                dp_int_bytes += b
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "bytes_fused": cost.bytes_fused,
+        "collective_bytes": float(sum(by_kind.values())),
+        "coll_by_kind": dict(by_kind),
+        "tp_bytes": tp_bytes,
+        "dp_bytes": dp_bytes,
+        "dp_int_bytes": dp_int_bytes,
+    }

@@ -1,0 +1,61 @@
+"""§Roofline table generator: reads the dry-run sweep JSONLs and emits the
+per-(arch × shape × mesh) three-term roofline, dominant bottleneck, model-
+flops ratio and a one-line lever per cell."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+LEVERS = {
+    ("compute_s", "train"): "raise MXU utilization: larger per-device batch via grad-accum, bf16 throughout",
+    ("memory_s", "train"): "cut activation traffic: longer attention chunks, fewer remat boundaries, fuse optimizer (Pallas fused_update)",
+    ("memory_s", "prefill"): "larger KV chunks + bf16 logits to cut per-chunk HBM rewrites",
+    ("memory_s", "decode"): "KV-cache dtype (bf16->int8), batch more sequences per chip",
+    ("collective_s", "train"): "shrink the gradient wire: int8 IntSGD, bucketed overlap with backward",
+    ("collective_s", "prefill"): "defer TP psums across fused layers / sequence-sharded activations",
+    ("collective_s", "decode"): "replicate small weights to drop TP psums at batch=1",
+}
+
+
+def load(path):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "roofline" in r:
+                rows.append(r)
+    return rows
+
+
+def table(rows, emit=print):
+    emit(
+        f"| {'arch':21s} | {'shape':11s} | chips | {'compute_s':>10s} | {'memory_s':>10s} "
+        f"| {'coll_s':>9s} | dominant | {'6ND/HLO':>7s} | arg_GB | tmp_GB |"
+    )
+    emit("|" + "-" * 21 + "|" + "-" * 13 + "|-------|" + "-" * 12 + "|" + "-" * 12 + "|" + "-" * 11 + "|----------|" + "-" * 9 + "|--------|--------|")
+    for r in rows:
+        t = r["roofline"]
+        kind = "train" if r["shape"].startswith("train") else (
+            "prefill" if "prefill" in r["shape"] else "decode")
+        emit(
+            f"| {r['arch']:21s} | {r['shape']:11s} | {r['n_chips']:5d} "
+            f"| {t['compute_s']:10.3e} | {t['memory_s']:10.3e} | {t['collective_s']:9.2e} "
+            f"| {r['dominant'].replace('_s',''):8s} | {r['useful_flops_frac']:7.3f} "
+            f"| {r['memory']['argument_bytes']/1e9:6.2f} | {r['memory']['temp_bytes']/1e9:6.2f} |"
+        )
+
+
+def main(emit=print):
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for name in ("dryrun_single_pod_v2.jsonl", "dryrun_multi_pod_v2.jsonl"):
+        rows = load(os.path.join(here, name))
+        if rows:
+            emit(f"\n== {name} ==")
+            table(rows, emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  bench_convergence       — Figure 1 (IntSGD vs Heuristic vs SGD curves)
+  bench_compress_overhead — Tables 2/3 computation-overhead column
+  bench_comm_volume       — Tables 2/3 communication column (structural bytes)
+  bench_sensitivity       — Figure 5 (β/ε sweep)
+  bench_diana             — Figure 6 (max transmitted integer, IntGD vs DIANA)
+  roofline                — §Roofline table from the dry-run sweeps (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only name]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_comm_volume,
+        bench_compress_overhead,
+        bench_convergence,
+        bench_diana,
+        bench_sensitivity,
+        roofline,
+    )
+
+    suites = {
+        "compress_overhead": bench_compress_overhead.main,
+        "diana": bench_diana.main,
+        "sensitivity": bench_sensitivity.main,
+        "convergence": bench_convergence.main,
+        "comm_volume": bench_comm_volume.main,
+        "roofline": roofline.main,
+    }
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Appendix C.5 reproduction: l2-regularized logistic regression across 12
+heterogeneous workers — IntGD's per-worker payload integers blow up near the
+optimum; IntDIANA (GD and L-SVRG-flavoured stochastic estimators) keeps them
+within ~3 bits while converging at the same rate.
+
+  PYTHONPATH=src python examples/logreg_diana.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_compressor
+from repro.core.compressor import IntSGD
+from repro.core.scaling import AlphaLastStep
+from repro.core.simulate import SimTrainer
+from repro.data.logreg import make_logreg
+from repro.optim import sgd
+from repro.optim.schedules import constant
+
+N = 12
+
+
+def main():
+    # strong convexity (λ=0.1) so full-gradient descent contracts fast —
+    # the regime where ||Δx||→0 exposes IntGD's payload blowup (Fig. 6)
+    prob = make_logreg(
+        jax.random.PRNGKey(0), n_workers=N, m=128, d=300, lam=1e-1,
+        heterogeneity=2.0,
+    )
+    # normalize features so L = O(1) and full GD contracts at lr=1 — the
+    # fast-contraction regime where ||Δx||→0 exposes the payload blowup
+    import dataclasses as _dc
+    prob = _dc.replace(prob, A=prob.A / jnp.sqrt(300.0))
+    data = prob.worker_data()
+    x0 = {"x": jnp.zeros(300)}
+
+    def run(name, comp, steps=800, lr=1.0):
+        tr = SimTrainer(prob.worker_loss, N, comp, sgd(), constant(lr))
+        st = tr.init(x0)
+        ints, losses = [], []
+        for i in range(steps):
+            st, m = tr.step(st, data)
+            ints.append(0 if m is None else float(m.max_local_int))
+            if i % 50 == 0 or i == steps - 1:
+                losses.append(float(prob.full_loss(st.params["x"])))
+        print(f"{name:10s} loss: " + " ".join(f"{l:.4f}" for l in losses))
+        marks = [10, 100, 300, 500, steps - 1]
+        print(f"{name:10s} |payload|∞: " + " ".join(f"@{i}:{ints[i]:.0f}" for i in marks))
+        bits = 1 + np.log2(max(ints[-1], 1))
+        print(f"{name:10s} -> {bits:.1f} bits/coordinate at the end\n")
+
+    print("== IntGD (full gradients, Prop-3 α) — the blowup ==")
+    run("intgd", IntSGD(alpha_rule=AlphaLastStep()))
+    print("== IntDIANA (gradient differences) — bounded ==")
+    run("intdiana", make_compressor("intdiana"))
+
+
+if __name__ == "__main__":
+    main()

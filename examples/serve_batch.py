@@ -1,0 +1,35 @@
+"""Batched serving demo: continuous batching over slots with a smoke-scale
+GQA model — greedy decode, slot reuse, deterministic outputs.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_arch, smoke_config
+from repro.models.transformer import init_lm_params
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    cfg = smoke_config(get_arch("granite-8b"))
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, slots=4, max_seq=128)
+    prompts = [[1, 2, 3], [7, 8], [11, 12, 13, 14], [21], [31, 32], [41, 42, 43]]
+    reqs = [Request(rid=i, prompt=p, max_new=12) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    iters = eng.run()
+    dt = time.time() - t0
+    for r in reqs:
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out}")
+    total = sum(len(r.out) for r in reqs)
+    print(f"\n{total} tokens over {len(reqs)} requests in {iters} engine "
+          f"iterations ({total/dt:.1f} tok/s on CPU; 4-slot continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

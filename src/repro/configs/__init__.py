@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_arch,
+    get_shape,
+    runnable_cells,
+    smoke_config,
+)

@@ -1,0 +1,18 @@
+"""xlstm-125m [ssm]: 12L d_model=768 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks in (m,m,s) pattern; recurrent, sub-quadratic. [arXiv:2405.04517;
+unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    head_dim=192,
+    tie_embeddings=True,
+    source="arXiv:2405.04517",
+)

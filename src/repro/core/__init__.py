@@ -1,0 +1,34 @@
+"""IntSGD core: integer rounding, adaptive scaling, compressors, aggregation."""
+from repro.core.comm import CommCtx, fold_worker_key
+from repro.core.compressor import (
+    Compressor,
+    HeuristicIntSGD,
+    IntDIANA,
+    IntSGD,
+    Metrics,
+    NatSGD,
+    NoCompression,
+    PowerSGD,
+    QSGD,
+    SignSGD,
+    TopK,
+    aggregate_exact,
+    make_compressor,
+)
+from repro.core.rounding import (
+    decode,
+    deterministic_round,
+    encode,
+    int_round,
+    stochastic_round,
+)
+from repro.core.scaling import (
+    AlphaBlockwise,
+    AlphaDiana,
+    AlphaHeuristic,
+    AlphaLastStep,
+    AlphaMovingAvg,
+    AlphaRule,
+    AlphaState,
+    make_alpha_rule,
+)

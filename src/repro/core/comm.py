@@ -1,0 +1,74 @@
+"""Communication context: one abstraction for real meshes and simulated workers.
+
+Compressors and aggregators are written against ``CommCtx`` only. The same
+code path then runs:
+
+  * inside ``shard_map`` over the production mesh (axes = ("pod","data") or
+    ("data",)) — collectives lower to real ICI all-reduce / all-gather;
+  * inside ``jax.vmap(..., axis_name="workers")`` — the n-worker simulation
+    used by CPU convergence tests and the paper-reproduction benchmarks.
+
+This is what lets us validate the *distributed algorithm* bit-exactly on a
+single CPU device and then lower the identical code for 512 chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCtx:
+    axes: Tuple[str, ...]  # mesh/vmap axis names holding the data-parallel workers
+    axis_sizes: Tuple[int, ...]
+    model_axis: str | None = None  # TP axis (for global profiling reductions)
+
+    @property
+    def n(self) -> int:
+        out = 1
+        for s in self.axis_sizes:
+            out *= s
+        return out
+
+    def psum(self, x):
+        return jax.tree.map(lambda v: lax.psum(v, self.axes), x)
+
+    def pmax(self, x):
+        return jax.tree.map(lambda v: lax.pmax(v, self.axes), x)
+
+    def pmax_global(self, x):
+        """Max over workers AND TP shards (profiling reductions that must see
+        the entire model, e.g. Heuristic IntSGD's max_exp)."""
+        axes = self.axes + ((self.model_axis,) if self.model_axis else ())
+        return jax.tree.map(lambda v: lax.pmax(v, axes), x)
+
+    def pmean(self, x):
+        return jax.tree.map(lambda v: lax.psum(v, self.axes) / self.n, x)
+
+    def all_gather(self, x):
+        """Gather with a flat leading worker axis of size n."""
+
+        def g(v):
+            out = v
+            for ax in reversed(self.axes):
+                out = lax.all_gather(out, ax)
+            return out.reshape((self.n,) + v.shape)
+
+        return jax.tree.map(g, x)
+
+    def worker_index(self):
+        """Linearized data-parallel worker id in [0, n)."""
+        idx = 0
+        for ax, size in zip(self.axes, self.axis_sizes):
+            idx = idx * size + lax.axis_index(ax)
+        return idx
+
+
+def fold_worker_key(key: jax.Array, ctx: CommCtx) -> jax.Array:
+    """Independent rounding randomness per worker (required for the 1/n
+    variance averaging in Lemma 2's proof — quantization errors must be
+    independent across workers)."""
+    return jax.random.fold_in(key, ctx.worker_index())

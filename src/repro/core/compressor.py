@@ -1,0 +1,594 @@
+"""Gradient compressors: IntSGD (ours, all variants) + the paper's baselines.
+
+Every compressor implements::
+
+    init(params)                         -> state (replicated pytree)
+    aggregate(state, grads, key, eta, ctx) -> (ghat, new_state, metrics)
+
+where ``grads`` is the *local* gradient pytree of one worker and ``ctx`` is a
+:class:`repro.core.comm.CommCtx`. ``ghat`` is the aggregated (averaged)
+gradient estimate, identical on every worker. ``metrics`` reports wire
+statistics (max |integer| on the wire, estimated bits/coordinate, payload
+bytes) used by tests and the paper-table benchmarks.
+
+Aggregation semantics per family:
+
+  * all-reduce compatible (IntSGD, Heuristic IntSGD, PowerSGD, SignSGD, none):
+    the payload is *summed* across workers in one psum;
+  * all-gather only (QSGD, NatSGD, TopK): payloads are gathered and each
+    worker decodes all n of them — the expensive path the paper's Tables 2/3
+    quantify; our roofline benchmark reproduces that comparison from HLO
+    collective bytes.
+
+IntSGD state-update split: α depends on r_k, which depends on the *model
+update* of the previous step. The optimizer wrapper calls
+``observe_update(state, delta_x)`` after applying the step; ``aggregate`` only
+reads the current state. The first optimization step must use exact
+aggregation (paper §4.1 "the first communication is exact") — drivers call
+``aggregate_exact`` at k=0 and the compressed step thereafter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, ClassVar, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import rounding
+from repro.core.comm import CommCtx, fold_worker_key
+from repro.core.stats import DxStats, TreeDims, local_tree_dims
+from repro.core.scaling import (
+    AlphaBlockwise,
+    AlphaDiana,
+    AlphaHeuristic,
+    AlphaLastStep,
+    AlphaMovingAvg,
+    AlphaRule,
+)
+from repro.utils.tree import tree_size, tree_sq_norm
+
+
+def _leaf_dims(params):
+    return jax.tree.map(lambda x: float(x.size), params)
+
+
+def aggregate_exact(grads, ctx: CommCtx):
+    """Full-precision mean over workers (step-0 / no-compression path)."""
+    return ctx.pmean(grads)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    max_int: jax.Array  # max |aggregated integer| on the wire (0 for float paths)
+    bits_per_coord: jax.Array  # estimated wire bits per coordinate
+    payload_bytes: float = dataclasses.field(
+        metadata=dict(static=True)
+    )  # static: bytes sent per worker per step
+    # max over workers of the LOCAL payload |Int(α g_i)|∞ — the per-worker
+    # wire-width requirement; this is the quantity that blows up for IntGD on
+    # heterogeneous data and that IntDIANA bounds (Appendix A.2 / Fig. 6)
+    max_local_int: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros(())
+    )
+
+
+class Compressor:
+    supports_allreduce: ClassVar[bool] = True
+    name: ClassVar[str] = "base"
+
+    def init(self, params) -> Any:
+        return ()
+
+    def observe_update(self, state, dx_stats: DxStats):
+        """Called by the optimizer after x^{k+1} = x^k - η ĝ with the GLOBAL
+        ||Δx||² statistics (see repro.core.stats)."""
+        return state
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# Full precision (the SGD baseline; also what step 0 of IntSGD uses)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NoCompression(Compressor):
+    name: ClassVar[str] = "none"
+    # all-gather flavour exists purely to reproduce the paper's
+    # SGD (All-gather) row; semantics are identical.
+    use_allgather: bool = False
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        d = tree_size(grads)
+        if self.use_allgather:
+            gathered = ctx.all_gather(grads)
+            ghat = jax.tree.map(lambda g: jnp.mean(g, axis=0), gathered)
+            payload = 4.0 * d * ctx.n
+        else:
+            ghat = ctx.pmean(grads)
+            payload = 4.0 * d
+        m = Metrics(jnp.zeros(()), jnp.full((), 32.0), payload)
+        return ghat, state, m
+
+
+# --------------------------------------------------------------------------
+# IntSGD (ours) — global / blockwise α, stochastic / deterministic rounding
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IntSGD(Compressor):
+    """Algorithm 1 (global α) / Algorithm 2 (blockwise α)."""
+
+    name: ClassVar[str] = "intsgd"
+    alpha_rule: AlphaRule = AlphaMovingAvg()
+    bits: int = 32
+    stochastic: bool = True
+    use_kernels: bool = False  # route encode/decode through Pallas kernels
+
+    @property
+    def blockwise(self) -> bool:
+        return isinstance(self.alpha_rule, AlphaBlockwise)
+
+    def init(self, params):
+        return self.alpha_rule.init(params)
+
+    def observe_update(self, state, dx_stats: DxStats):
+        return self.alpha_rule.update(state, dx_stats)
+
+    def _alphas(self, state, grads, eta, n, dims: TreeDims | None):
+        if dims is None:
+            dims = local_tree_dims(grads)
+        if self.blockwise:
+            a = self.alpha_rule.alpha_tree(
+                state, eta, n, dims.leaf_dims, float(dims.d)
+            )
+        else:
+            a_scalar = self.alpha_rule.alpha(state, eta, n, dims.d)
+            a = jax.tree.map(lambda _: a_scalar, grads)
+        return a
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        alphas = self._alphas(state, grads, eta, n, dims)
+        wkey = fold_worker_key(key, ctx)
+        leaves, treedef = jax.tree.flatten(grads)
+        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            def enc(g, a, k):
+                return kops.int_compress(
+                    g, a, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
+                )
+
+        else:
+
+            def enc(g, a, k):
+                return rounding.encode(
+                    g, a, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
+                )
+
+        ints = jax.tree.map(enc, grads, alphas, akeys)
+        local_max = jnp.max(
+            jnp.stack(
+                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(ints)]
+            )
+        )
+        max_local = jax.tree.map(lambda v: lax.pmax(v, ctx.axes), local_max)
+        # THE wire: integer all-reduce (psum of int32). On TPU this is the ICI
+        # collective carrying only integers — the paper's INA/all-reduce analog.
+        int_sum = ctx.psum(ints)
+        ghat = jax.tree.map(
+            lambda s, a: rounding.decode(s, a, n_workers=n), int_sum, alphas
+        )
+        max_int = jnp.max(
+            jnp.stack(
+                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
+            )
+        )
+        bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
+        payload = (self.bits / 8.0) * tree_size(grads)
+        return ghat, state, Metrics(max_int, bits, payload, max_local)
+
+
+# --------------------------------------------------------------------------
+# Heuristic IntSGD (Sapio et al. 2021) — profiling max-reduce, fixed α
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HeuristicIntSGD(Compressor):
+    name: ClassVar[str] = "heuristic_intsgd"
+    bits: int = 8
+    stochastic: bool = False
+
+    def init(self, params):
+        return ()
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        rule = AlphaHeuristic(bits=self.bits)
+        local_absmax = jnp.max(
+            jnp.stack([jnp.max(jnp.abs(l)) for l in jax.tree.leaves(grads)])
+        )
+        # the profiling step: an extra float max-reduce before every round —
+        # this is exactly the overhead the paper's adaptive rule removes.
+        global_absmax = ctx.pmax_global(local_absmax)
+        alpha = rule.alpha_from_absmax(global_absmax, n)
+        wkey = fold_worker_key(key, ctx)
+        leaves, treedef = jax.tree.flatten(grads)
+        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        ints = jax.tree.map(
+            lambda g, k: rounding.encode(
+                g, alpha, k, n_workers=1, bits=self.bits, stochastic=self.stochastic
+            ),
+            grads,
+            akeys,
+        )
+        int_sum = ctx.psum(ints)
+        ghat = jax.tree.map(lambda s: rounding.decode(s, alpha, n_workers=n), int_sum)
+        max_int = jnp.max(
+            jnp.stack(
+                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
+            )
+        )
+        bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
+        return ghat, state, Metrics(max_int, bits, (self.bits / 8.0) * tree_size(grads))
+
+
+# --------------------------------------------------------------------------
+# QSGD (Alistarh et al. 2017) — all-gather only
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    name: ClassVar[str] = "qsgd"
+    supports_allreduce: ClassVar[bool] = False
+    levels: int = 64  # 6-bit, matching the paper's setup
+
+    def init(self, params):
+        return ()
+
+    def _encode_leaf(self, g, key):
+        norm = jnp.linalg.norm(g.astype(jnp.float32).reshape(-1)) + 1e-30
+        scaled = jnp.abs(g.astype(jnp.float32)) / norm * self.levels
+        lo = jnp.floor(scaled)
+        p = scaled - lo
+        u = jax.random.uniform(key, g.shape, dtype=jnp.float32)
+        q = lo + (u < p).astype(jnp.float32)
+        return (
+            q.astype(jnp.int8),
+            jnp.sign(g).astype(jnp.int8),
+            norm.astype(jnp.float32),
+        )
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        wkey = fold_worker_key(key, ctx)
+        leaves, treedef = jax.tree.flatten(grads)
+        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        enc = jax.tree.map(self._encode_leaf, grads, akeys, is_leaf=lambda x: hasattr(x, "shape"))
+        # all-gather of (levels, signs, norm): the expensive primitive
+        gathered = ctx.all_gather(enc)
+
+        def dec(leaf):
+            q, s, norm = leaf
+            vals = q.astype(jnp.float32) * s.astype(jnp.float32)
+            vals = vals * (norm.reshape((-1,) + (1,) * (q.ndim - 1)) / self.levels)
+            return jnp.mean(vals, axis=0)
+
+        ghat = jax.tree.map(dec, gathered, is_leaf=lambda x: isinstance(x, tuple))
+        d = tree_size(grads)
+        payload = d * 1.25  # ~6 bits levels + 1 bit sign + norms, per worker
+        return ghat, state, Metrics(jnp.zeros(()), jnp.full((), 7.0), payload)
+
+
+# --------------------------------------------------------------------------
+# NatSGD — natural compression (Horváth et al. 2019), all-gather only
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NatSGD(Compressor):
+    name: ClassVar[str] = "natsgd"
+    supports_allreduce: ClassVar[bool] = False
+
+    def init(self, params):
+        return ()
+
+    def _encode_leaf(self, g, key):
+        g = g.astype(jnp.float32)
+        mag = jnp.abs(g)
+        safe = jnp.maximum(mag, 1e-38)
+        e_lo = jnp.floor(jnp.log2(safe))
+        p_up = mag / jnp.exp2(e_lo) - 1.0  # prob of rounding exponent up
+        u = jax.random.uniform(key, g.shape, dtype=jnp.float32)
+        e = e_lo + (u < p_up).astype(jnp.float32)
+        e = jnp.where(mag == 0, -127.0, e)
+        return jnp.clip(e, -126.0, 126.0).astype(jnp.int8), jnp.sign(g).astype(jnp.int8)
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        wkey = fold_worker_key(key, ctx)
+        leaves, treedef = jax.tree.flatten(grads)
+        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        enc = jax.tree.map(self._encode_leaf, grads, akeys, is_leaf=lambda x: hasattr(x, "shape"))
+        gathered = ctx.all_gather(enc)
+
+        def dec(leaf):
+            e, s = leaf
+            vals = jnp.where(
+                e.astype(jnp.float32) <= -127.0,
+                0.0,
+                jnp.exp2(e.astype(jnp.float32)) * s.astype(jnp.float32),
+            )
+            return jnp.mean(vals, axis=0)
+
+        ghat = jax.tree.map(dec, gathered, is_leaf=lambda x: isinstance(x, tuple))
+        d = tree_size(grads)
+        return ghat, state, Metrics(jnp.zeros(()), jnp.full((), 9.0), d * 1.125)
+
+
+# --------------------------------------------------------------------------
+# PowerSGD (Vogels et al. 2019) + error feedback — all-reduce compatible
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PowerSGD(Compressor):
+    name: ClassVar[str] = "powersgd"
+    rank: int = 2
+    ef: bool = True
+    min_compress_size: int = 4096  # small tensors stay uncompressed (float psum)
+
+    def _is_matrix(self, x):
+        return x.ndim >= 2 and x.size >= self.min_compress_size
+
+    def init(self, params):
+        def q_init(x):
+            if not self._is_matrix(x):
+                return None
+            m = x.reshape(x.shape[0], -1)
+            k = jax.random.PRNGKey(abs(hash(str(m.shape))) % (2**31))
+            return jax.random.normal(k, (m.shape[1], self.rank), jnp.float32)
+
+        qs = jax.tree.map(q_init, params)
+        errs = jax.tree.map(jnp.zeros_like, params) if self.ef else None
+        return {"q": qs, "err": errs}
+
+    @staticmethod
+    def _orthonormalize(p):
+        # modified Gram-Schmidt, numerically adequate for small ranks
+        q, _ = jnp.linalg.qr(p)
+        return q
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        errs = state["err"]
+        work = (
+            jax.tree.map(jnp.add, grads, errs) if self.ef else grads
+        )
+
+        def comp(m, q):
+            if q is None:
+                return None
+            m2 = m.reshape(m.shape[0], -1).astype(jnp.float32)
+            p = m2 @ q  # (rows, rank)
+            p = lax.psum(p, ctx.axes) / n  # all-reduce #1 (small!)
+            p_hat = self._orthonormalize(p)
+            qn = m2.T @ p_hat  # (cols, rank)
+            qn = lax.psum(qn, ctx.axes) / n  # all-reduce #2
+            approx = (p_hat @ qn.T).reshape(m.shape)
+            return approx, qn
+
+        q_leaf = lambda x: x is None
+        outs = jax.tree.map(
+            lambda m, q: comp(m, q), work, state["q"], is_leaf=q_leaf
+        )
+        # `outs` leaves are (approx, qn) tuples or None — stop traversal there
+        o_leaf = lambda x: x is None or (
+            isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "shape")
+        )
+
+        def pick_ghat(m, o):
+            if o is None:
+                return lax.psum(m, ctx.axes) / n  # uncompressed small tensors
+            return o[0]
+
+        def pick_q(o, q_old):
+            return q_old if o is None else o[1]
+
+        ghat = jax.tree.map(pick_ghat, work, outs, is_leaf=o_leaf)
+        new_q = jax.tree.map(pick_q, outs, state["q"], is_leaf=o_leaf)
+        if self.ef:
+            new_err = jax.tree.map(
+                lambda w, g, o: jnp.zeros_like(w) if o is None else (w - g),
+                work,
+                ghat,
+                outs,
+                is_leaf=o_leaf,
+            )
+        else:
+            new_err = None
+        d = tree_size(grads)
+        return (
+            ghat,
+            {"q": new_q, "err": new_err},
+            Metrics(jnp.zeros(()), jnp.full((), 32.0), 4.0 * d * 0.05),
+        )
+
+
+# --------------------------------------------------------------------------
+# SignSGD + EF (Karimireddy et al. 2019) — scaled sign, all-reduce of int8
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SignSGD(Compressor):
+    name: ClassVar[str] = "signsgd"
+    ef: bool = True
+
+    def init(self, params):
+        return jax.tree.map(jnp.zeros_like, params) if self.ef else ()
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        work = jax.tree.map(jnp.add, grads, state) if self.ef else grads
+
+        def comp(w):
+            w32 = w.astype(jnp.float32)
+            scale = jnp.mean(jnp.abs(w32))  # ||w||_1 / d
+            signs = jnp.sign(w32).astype(jnp.int8)
+            local = scale * signs.astype(jnp.float32)  # C(p_i), what worker i sends
+            # wire: int8 sign psum + one scalar psum (all-reduce compatible)
+            ghat_leaf = lax.psum(local, ctx.axes) / n
+            return ghat_leaf, local
+
+        outs = jax.tree.map(comp, work)
+        ghat = jax.tree.map(lambda o: o[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+        # EF uses each worker's OWN compressed output: e_i' = p_i - C(p_i)
+        new_state = (
+            jax.tree.map(
+                lambda w, o: w - o[1],
+                work,
+                outs,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            if self.ef
+            else ()
+        )
+        d = tree_size(grads)
+        return ghat, new_state, Metrics(jnp.zeros(()), jnp.full((), 1.0), d / 8.0)
+
+
+# --------------------------------------------------------------------------
+# Top-K + EF — all-gather of (values, indices)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    name: ClassVar[str] = "topk"
+    supports_allreduce: ClassVar[bool] = False
+    k_frac: float = 0.01
+    ef: bool = True
+
+    def init(self, params):
+        return jax.tree.map(jnp.zeros_like, params) if self.ef else ()
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        work = jax.tree.map(jnp.add, grads, state) if self.ef else grads
+
+        def comp(w):
+            flat = w.astype(jnp.float32).reshape(-1)
+            k = max(1, int(self.k_frac * flat.size))
+            _, idx = lax.top_k(jnp.abs(flat), k)
+            vals = flat[idx]
+            local = jnp.zeros_like(flat).at[idx].set(vals)  # C(p_i)
+            g_vals = ctx.all_gather(vals)  # (n, k)
+            g_idx = ctx.all_gather(idx)  # (n, k)
+            out = jnp.zeros_like(flat)
+            out = out.at[g_idx.reshape(-1)].add(g_vals.reshape(-1))
+            return (out / n).reshape(w.shape), local.reshape(w.shape)
+
+        outs = jax.tree.map(comp, work)
+        ghat = jax.tree.map(lambda o: o[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = (
+            jax.tree.map(
+                lambda w, o: w - o[1],
+                work,
+                outs,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            if self.ef
+            else ()
+        )
+        d = tree_size(grads)
+        return ghat, new_state, Metrics(
+            jnp.zeros(()), jnp.full((), 32.0 * self.k_frac * 2), 8.0 * d * self.k_frac
+        )
+
+
+# --------------------------------------------------------------------------
+# IntDIANA (Algorithm 3) — compress gradient differences with local shifts
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IntDIANA(Compressor):
+    """Algorithm 3. Local shift h_i lives on each worker (it is NOT replicated
+    across the data axes — in the distributed runtime it is per-device state);
+    the global shift h is replicated. Fixes the heterogeneous-data max-int
+    blowup of plain IntSGD (Appendix A.2, Fig. 6).
+    """
+
+    name: ClassVar[str] = "intdiana"
+    alpha_rule: AlphaRule = AlphaDiana()
+    bits: int = 32
+    stochastic: bool = True
+
+    def init(self, params):
+        zeros = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return {
+            "alpha": self.alpha_rule.init(params),
+            "h_local": zeros,  # per-worker (lives under the data axes)
+            "h_global": zeros,  # replicated
+        }
+
+    def observe_update(self, state, dx_stats: DxStats):
+        return dict(state, alpha=self.alpha_rule.update(state["alpha"], dx_stats))
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        n = ctx.n
+        d = dims.d if dims is not None else tree_size(grads)
+        alpha = self.alpha_rule.alpha(state["alpha"], eta, n, d)
+        wkey = fold_worker_key(key, ctx)
+        leaves, treedef = jax.tree.flatten(grads)
+        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        diff = jax.tree.map(lambda g, h: g.astype(jnp.float32) - h, grads, state["h_local"])
+        ints = jax.tree.map(
+            lambda x, k: rounding.encode(
+                x, alpha, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
+            ),
+            diff,
+            akeys,
+        )
+        local_max = jnp.max(
+            jnp.stack(
+                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(ints)]
+            )
+        )
+        max_local = jax.tree.map(lambda v: lax.pmax(v, ctx.axes), local_max)
+        # local shift: h_i += Q(g_i - h_i) = (1/α) Int(α (g_i - h_i))
+        q_local = jax.tree.map(lambda s: s.astype(jnp.float32) / alpha, ints)
+        h_local = jax.tree.map(jnp.add, state["h_local"], q_local)
+        int_sum = ctx.psum(ints)
+        mean_q = jax.tree.map(
+            lambda s: rounding.decode(s, alpha, n_workers=n), int_sum
+        )
+        ghat = jax.tree.map(jnp.add, state["h_global"], mean_q)
+        h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
+        max_int = jnp.max(
+            jnp.stack(
+                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
+            )
+        )
+        bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
+        new_state = dict(state, h_local=h_local, h_global=h_global)
+        return ghat, new_state, Metrics(
+            max_int, bits, (self.bits / 8.0) * d, max_local
+        )
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def make_compressor(name: str, **kw) -> Compressor:
+    reg = {
+        "none": NoCompression,
+        "allgather_sgd": partial(NoCompression, use_allgather=True),
+        "intsgd": IntSGD,
+        "intsgd_determ": partial(IntSGD, stochastic=False),
+        "intsgd_block": partial(IntSGD, alpha_rule=AlphaBlockwise()),
+        "intsgd8": partial(IntSGD, bits=8),
+        "heuristic_intsgd": HeuristicIntSGD,
+        "qsgd": QSGD,
+        "natsgd": NatSGD,
+        "powersgd": PowerSGD,
+        "signsgd": SignSGD,
+        "topk": TopK,
+        "intdiana": IntDIANA,
+    }
+    if name not in reg:
+        raise ValueError(f"unknown compressor {name!r}; options {sorted(reg)}")
+    return reg[name](**kw)

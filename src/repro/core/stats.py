@@ -1,0 +1,59 @@
+"""Model-update statistics feeding the adaptive α rules.
+
+Under tensor parallelism the quantities in Alg. 1 are GLOBAL: d is the full
+model dimension and r_k tracks the global ||Δx||². Each TP shard computes its
+local contribution and the step function psums over the model axis before
+handing the stats to the compressor — so every device derives the *same* α
+with zero extra communication beyond two scalars per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_size
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DxStats:
+    """||Δx||² statistics (already reduced to global values)."""
+
+    sq: jax.Array  # scalar ||Δx||²
+    leaf_sq: Any  # pytree of per-leaf ||Δx_l||² (for blockwise α)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TreeDims:
+    """Global dimensionality of the model (static)."""
+
+    d: int = dataclasses.field(metadata=dict(static=True))
+    leaf_dims: Any = dataclasses.field(metadata=dict(static=True))  # pytree of ints
+
+
+def local_dx_stats(delta_x) -> DxStats:
+    leaf_sq = jax.tree.map(
+        lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), delta_x
+    )
+    sq = jnp.sum(jnp.stack(jax.tree.leaves(leaf_sq))) if jax.tree.leaves(leaf_sq) else jnp.zeros(())
+    return DxStats(sq=sq, leaf_sq=leaf_sq)
+
+
+def local_tree_dims(tree) -> TreeDims:
+    leaf_dims = jax.tree.map(lambda x: float(x.size), tree)
+    return TreeDims(d=tree_size(tree), leaf_dims=leaf_dims)
+
+
+def psum_stats(stats: DxStats, axis: Optional[str]) -> DxStats:
+    if axis is None:
+        return stats
+    from jax import lax
+
+    return DxStats(
+        sq=lax.psum(stats.sq, axis),
+        leaf_sq=jax.tree.map(lambda s: lax.psum(s, axis), stats.leaf_sq),
+    )

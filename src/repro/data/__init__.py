@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLMData, worker_batches
+from repro.data.logreg import LogRegProblem, make_logreg

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for IntSGD's compute hot-spots.
+
+The paper's SwitchML predecessor spends measurable wall-clock on
+compression/decompression (Tables 2-3 "Computation Overhead" column); on TPU
+we fuse those element-wise chains into three kernels so the gradient tensor
+crosses HBM once per stage:
+
+  int_compress   g, α, seed          -> Int(α∘g) clipped   (1 read, 1 write)
+  fused_update   Σints, p, m, scalars -> p', m'            (3 reads, 2 writes,
+                 replacing the naive dequant→wd→momentum→axpy chain that
+                 would read/write HBM 9 times)
+  block_norms    x -> per-block ||x_l||²                   (for blockwise α)
+
+Randomness is a counter-based hash PRNG (fmix32 finalizer) computed in plain
+jnp ops: identical bits under interpret=True (CPU validation) and Mosaic
+(TPU), and reproduced exactly by the pure-jnp oracle in ref.py.
+"""

@@ -1,0 +1,60 @@
+"""Pallas kernel: fused dequantize + weight-decay + momentum + SGD step.
+
+Replaces the chain
+    g  = Σints * 1/(nα)         (read int, write g)
+    g += wd * p                 (read g, p, write g)
+    m  = μ m + g                (read m, g, write m)
+    p -= lr m                   (read p, m, write p)
+— 9 HBM tensor touches — with a single pass: 3 reads (ints, p, m) and
+2 writes (p', m'). On a memory-bound elementwise stage this is a ~1.8×
+reduction in optimizer-step HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 1024)
+
+
+def _kernel(sc_ref, ints_ref, p_ref, m_ref, po_ref, mo_ref):
+    inv_nalpha = sc_ref[0]
+    lr = sc_ref[1]
+    mu = sc_ref[2]
+    wd = sc_ref[3]
+    p = p_ref[...].astype(jnp.float32)
+    g = ints_ref[...].astype(jnp.float32) * inv_nalpha + wd * p
+    m = mu * m_ref[...].astype(jnp.float32) + g
+    po_ref[...] = (p - lr * m).astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_update_2d(
+    int_sum: jax.Array,
+    param: jax.Array,
+    mom: jax.Array,
+    scalars: jax.Array,  # [inv_nalpha, lr, mu, wd] f32
+    *,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    rows, cols = int_sum.shape
+    bm, bn = block
+    assert rows % bm == 0 and cols % bn == 0
+    grid = (rows // bm, cols // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY), spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(param.shape, param.dtype),
+            jax.ShapeDtypeStruct(mom.shape, mom.dtype),
+        ),
+        interpret=interpret,
+    )(scalars.astype(jnp.float32), int_sum, param, mom)

@@ -1,0 +1,87 @@
+"""Pallas kernel: fused scale + stochastic/deterministic round + clip → int32.
+
+One HBM read of the f32 gradient tile, one HBM write of the int32 image —
+the entire Int(α∘g) operator of the paper in a single VMEM pass.
+
+Tiling: 2-D grid over a (rows, cols) view; blocks are (BM, BN) with BN a
+multiple of 128 (lane width) and BM a multiple of 8 (sublane, f32). VMEM
+footprint per step: BM*BN*4B (in) + BM*BN*4B (out) = 2 MiB at the default
+(256, 1024), comfortably inside the ~16 MiB VMEM budget while long enough to
+amortize HBM latency.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.prng import uniform_from_counter
+
+_INT_LIM = {8: 127, 16: 32767, 32: 2147483647}
+
+DEFAULT_BLOCK = (256, 1024)
+
+
+def _kernel(alpha_ref, seed_ref, x_ref, o_ref, *, lim, stochastic, ncols, block):
+    bm, bn = block
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)
+    scaled = x * alpha_ref[0]
+    if stochastic:
+        # global flat element counter (row-major over the padded 2-D view):
+        # identical to the oracle's jnp.arange counter.
+        row = lax.broadcasted_iota(jnp.uint32, (bm, bn), 0) + jnp.uint32(i * bm)
+        col = lax.broadcasted_iota(jnp.uint32, (bm, bn), 1) + jnp.uint32(j * bn)
+        counter = row * jnp.uint32(ncols) + col
+        u = uniform_from_counter(counter, seed_ref[0])
+        lo = jnp.floor(scaled)
+        r = lo + (u < (scaled - lo)).astype(jnp.float32)
+    else:
+        r = jnp.round(scaled)
+    r = jnp.clip(r, -float(lim), float(lim))
+    o_ref[...] = r.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_workers", "bits", "stochastic", "block", "interpret"),
+)
+def int_compress_2d(
+    x: jax.Array,
+    alpha: jax.Array,
+    seed: jax.Array,
+    *,
+    n_workers: int,
+    bits: int = 32,
+    stochastic: bool = True,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (rows, cols) f32, rows % block[0] == 0, cols % block[1] == 0."""
+    rows, cols = x.shape
+    bm, bn = block
+    assert rows % bm == 0 and cols % bn == 0, (x.shape, block)
+    lim = _INT_LIM[bits] // max(n_workers, 1)
+    grid = (rows // bm, cols // bn)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, lim=lim, stochastic=stochastic, ncols=cols, block=block
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # alpha (scalar, whole array)
+            pl.BlockSpec(memory_space=pl.ANY),  # seed
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        interpret=interpret,
+    )(
+        alpha.reshape(1).astype(jnp.float32),
+        seed.reshape(1).astype(jnp.int32),
+        x,
+    )

@@ -1,0 +1,134 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles arbitrary tensor shapes by flattening to a padded row-major 2-D view
+(pad-at-end keeps the kernel's flat element counter identical to the
+oracle's logical index, so stochastic rounding is bit-exact vs ref.py).
+
+On non-TPU backends the kernels run under ``interpret=True`` (the kernel body
+executed op-by-op on CPU) — the TARGET remains TPU Mosaic; CPU execution is
+for validation only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_norms as _bn
+from repro.kernels import fused_update as _fu
+from repro.kernels import int_compress as _ic
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+_SMALL = 2**18
+
+
+def _block_for(size: int):
+    return (8, 128) if size < _SMALL else _ic.DEFAULT_BLOCK
+
+
+def _to_2d(flat: jax.Array, block):
+    bm, bn = block
+    chunk = bm * bn
+    padded = (flat.size + chunk - 1) // chunk * chunk
+    flat = jnp.pad(flat, (0, padded - flat.size))
+    return flat.reshape(padded // bn, bn)
+
+
+def seed_from_key(key: jax.Array) -> jax.Array:
+    return jax.random.bits(key, (), jnp.uint32).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_workers", "bits", "stochastic", "interpret")
+)
+def int_compress(
+    x: jax.Array,
+    alpha: jax.Array,
+    key: jax.Array,
+    *,
+    n_workers: int,
+    bits: int = 32,
+    stochastic: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Int(α∘x) clipped for the n-worker sum — kernel-accelerated encode."""
+    interpret = _interpret_default() if interpret is None else interpret
+    seed = seed_from_key(key)
+    shape = x.shape
+    block = _block_for(x.size)
+    x2 = _to_2d(x.reshape(-1).astype(jnp.float32), block)
+    out = _ic.int_compress_2d(
+        x2,
+        alpha,
+        seed,
+        n_workers=n_workers,
+        bits=bits,
+        stochastic=stochastic,
+        block=block,
+        interpret=interpret,
+    )
+    return out.reshape(-1)[: x.size].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_update(
+    int_sum: jax.Array,
+    param: jax.Array,
+    mom: jax.Array,
+    inv_nalpha: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+    wd: jax.Array,
+    *,
+    interpret: bool | None = None,
+):
+    """p', m' = sgd-with-momentum step fused with integer dequantization."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = param.shape
+    block = _block_for(param.size)
+    ints2 = _to_2d(int_sum.reshape(-1), block)
+    p2 = _to_2d(param.reshape(-1).astype(jnp.float32), block)
+    m2 = _to_2d(mom.reshape(-1).astype(jnp.float32), block)
+    scalars = jnp.stack(
+        [
+            jnp.asarray(inv_nalpha, jnp.float32),
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(mu, jnp.float32),
+            jnp.asarray(wd, jnp.float32),
+        ]
+    )
+    po, mo = _fu.fused_update_2d(ints2, p2, m2, scalars, block=block, interpret=interpret)
+    unpad = lambda a, dt: a.reshape(-1)[: param.size].reshape(shape).astype(dt)
+    return unpad(po, param.dtype), unpad(mo, mom.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sq_norm(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """||x||² via the block-norms reduction kernel (single block)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    block = _block_for(x.size)
+    x2 = _to_2d(x.reshape(-1).astype(jnp.float32), block)
+    out = _bn.block_norms_2d(
+        x2, block_rows=x2.shape[0], tile=(block[0], x2.shape[1]), interpret=interpret
+    )
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("nblocks", "interpret"))
+def block_sq_norms(x: jax.Array, nblocks: int, *, interpret: bool | None = None):
+    """Squared norms of `nblocks` equal contiguous chunks of flat(x)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    flat = x.reshape(-1).astype(jnp.float32)
+    bm, bn = (8, 128)
+    per = (flat.size + nblocks - 1) // nblocks
+    per = (per + bm * bn - 1) // (bm * bn) * (bm * bn)
+    flat = jnp.pad(flat, (0, per * nblocks - flat.size))
+    x2 = flat.reshape(per * nblocks // bn, bn)
+    return _bn.block_norms_2d(
+        x2, block_rows=per // bn, tile=(bm, bn), interpret=interpret
+    )

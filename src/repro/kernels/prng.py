@@ -1,0 +1,35 @@
+"""Counter-based PRNG shared by kernels and their oracles.
+
+fmix32 (MurmurHash3 finalizer) over (element-counter ^ seed): statistically
+solid for rounding noise, stateless, and expressible in pure jnp uint32 ops —
+so the Pallas kernel and the ref.py oracle produce *identical* bits, enabling
+bit-exact validation of the stochastic rounding path on CPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalars embed as literals inside Pallas kernels (jnp arrays would be
+# captured constants, which pallas_call rejects)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 32-bit finalizer; input/output uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform_from_counter(counter: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """U[0,1) floats from an integer counter grid and an int32 seed."""
+    h = fmix32(counter.astype(jnp.uint32) * _GOLDEN + seed.astype(jnp.uint32))
+    # 24 high-quality mantissa bits -> [0, 1)
+    return (h >> np.uint32(8)).astype(jnp.float32) * np.float32(2.0**-24)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's semantics exactly, including the
+counter-based PRNG, so tests can assert bit-exact (integer outputs) or
+allclose (float outputs) equality across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.prng import uniform_from_counter
+
+_INT_LIM = {8: 127, 16: 32767, 32: 2147483647}
+
+
+def int_compress_ref(
+    x: jnp.ndarray,
+    alpha: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    n_workers: int,
+    bits: int = 32,
+    stochastic: bool = True,
+) -> jnp.ndarray:
+    """Int(α∘x), clipped so the n-worker sum fits `bits`, as int32.
+
+    Counter = flat element index (row-major over the padded 2-D view used by
+    the kernel — for the oracle we use the logical flat index, and ops.py
+    guarantees the kernel sees the same flat layout).
+    """
+    orig_shape = x.shape
+    xf = x.astype(jnp.float32).reshape(-1)
+    scaled = xf * alpha.astype(jnp.float32)
+    if stochastic:
+        counter = jnp.arange(xf.size, dtype=jnp.uint32)
+        u = uniform_from_counter(counter, seed)
+        lo = jnp.floor(scaled)
+        r = lo + (u < (scaled - lo)).astype(jnp.float32)
+    else:
+        r = jnp.round(scaled)
+    lim = _INT_LIM[bits] // max(n_workers, 1)
+    r = jnp.clip(r, -lim, lim)
+    return r.astype(jnp.int32).reshape(orig_shape)
+
+
+def fused_update_ref(
+    int_sum: jnp.ndarray,
+    param: jnp.ndarray,
+    mom: jnp.ndarray,
+    *,
+    inv_nalpha: jnp.ndarray,
+    lr: jnp.ndarray,
+    mu: jnp.ndarray,
+    wd: jnp.ndarray,
+):
+    """Dequantize + weight decay + momentum + SGD step (torch semantics)."""
+    g = int_sum.astype(jnp.float32) * inv_nalpha + wd * param.astype(jnp.float32)
+    new_m = mu * mom.astype(jnp.float32) + g
+    new_p = param.astype(jnp.float32) - lr * new_m
+    return new_p.astype(param.dtype), new_m.astype(mom.dtype)
+
+
+def block_norms_ref(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Squared L2 norm of each contiguous row-block of a 2-D array."""
+    rows = x.shape[0]
+    nblocks = (rows + block_rows - 1) // block_rows
+    pad = nblocks * block_rows - rows
+    xf = jnp.pad(x.astype(jnp.float32), ((0, pad), (0, 0)))
+    return jnp.sum(
+        jnp.square(xf).reshape(nblocks, block_rows, x.shape[1]), axis=(1, 2)
+    )

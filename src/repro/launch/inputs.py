@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input (the dry-run contract:
+weak-type-correct, shardable, no device allocation).
+
+For [vlm]/[audio] archs the modality frontend is a STUB: input_specs provides
+precomputed patch/frame embeddings of the documented frontend width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, kind: str = "train"):
+    b, t = shape.global_batch, shape.seq_len
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    bf16 = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+
+    if cfg.family == "encdec":
+        batch = {"frames": bf16(b, t, cfg.frontend_dim)}
+        if kind == "train":
+            # teacher-forced target length = source length (documented choice)
+            batch["tokens"] = i32(b, t)
+            batch["labels"] = i32(b, t)
+        return batch
+
+    t_text = t - cfg.n_frontend_tokens if cfg.frontend == "vit" else t
+    batch = {"tokens": i32(b, t_text)}
+    if cfg.frontend == "vit":
+        batch["patch_embeds"] = bf16(b, cfg.n_frontend_tokens, cfg.frontend_dim)
+    if kind == "train":
+        batch["labels"] = i32(b, t_text)
+    return batch
+
+
+def materialize_batch(cfg: ModelConfig, shape: ShapeConfig, key, kind="train"):
+    """Concrete random batch with the input_specs structure (smoke/demo)."""
+    structs = input_specs(cfg, shape, kind)
+
+    def mk(path, s):
+        name = path[-1].key
+        if s.dtype == jnp.int32:
+            return jax.random.randint(key, s.shape, 0, cfg.vocab)
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype)
+
+    return jax.tree_util.tree_map_with_path(mk, structs)

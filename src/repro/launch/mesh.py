@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 CPU device; only
+dryrun.py sets the 512-placeholder-device XLA flag before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    """The data-parallel (gradient-sync) axes: everything except `model`."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_sizes_of(mesh) -> tuple[int, ...]:
+    return tuple(mesh.shape[a] for a in dp_axes_of(mesh))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for multi-device CPU tests (spawned with forced host
+    device count in a subprocess)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

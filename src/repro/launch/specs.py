@@ -1,0 +1,141 @@
+"""PartitionSpec inference.
+
+Parameter specs are DERIVED, not hand-written: the model's init functions
+take ``n_shards`` ∈ {1, tp}; we eval_shape both and diff the shapes — the
+dimension that differs by exactly ×tp is the `model`-sharded one. This keeps
+the sharding table mechanically in sync with the model code.
+
+Cache/batch specs follow fixed per-leaf-name conventions (documented below),
+with leading stacked-layer axes auto-skipped.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.stats import TreeDims
+from repro.models.decode import init_lm_cache
+from repro.models.encdec import init_encdec_cache, init_encdec_params
+from repro.models.transformer import init_lm_params
+
+
+def _init_fn(cfg: ModelConfig):
+    return init_encdec_params if cfg.family == "encdec" else init_lm_params
+
+
+def param_shapes(cfg: ModelConfig, tp: int, n_shards: int):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        partial(_init_fn(cfg), cfg=cfg, tp=tp, n_shards=n_shards), key
+    )
+
+
+def infer_param_specs(cfg: ModelConfig, tp: int, model_axis: str = "model"):
+    """Returns (global_shapes, local_shapes, pspecs)."""
+    g = param_shapes(cfg, tp, 1)
+    l = param_shapes(cfg, tp, tp)
+
+    def spec(gl, lo):
+        if gl.shape == lo.shape:
+            return P()
+        diff = [
+            i
+            for i, (a, b) in enumerate(zip(gl.shape, lo.shape))
+            if a != b
+        ]
+        if len(diff) != 1 or gl.shape[diff[0]] != lo.shape[diff[0]] * tp:
+            raise ValueError(f"ambiguous sharding: {gl.shape} vs {lo.shape}")
+        parts = [None] * len(gl.shape)
+        parts[diff[0]] = model_axis
+        return P(*parts)
+
+    pspecs = jax.tree.map(spec, g, l)
+    return g, l, pspecs
+
+
+def global_tree_dims(cfg: ModelConfig, tp: int) -> TreeDims:
+    """GLOBAL model dimensionality (for α's d and blockwise d_l) with the
+    same tree structure as the LOCAL parameter shards."""
+    g = param_shapes(cfg, tp, 1)
+    leaf_dims = jax.tree.map(lambda x: float(jnp.prod(jnp.array(x.shape))), g)
+    import numpy as np
+
+    d = int(sum(np.prod(x.shape) for x in jax.tree.leaves(g)))
+    return TreeDims(d=d, leaf_dims=jax.tree.map(float, leaf_dims))
+
+
+# ---------------------------------------------------------------------------
+# cache specs: by leaf name, with leading stacked-layer axes skipped
+# ---------------------------------------------------------------------------
+_CACHE_BASE = {
+    # name: (ndim-without-stacking, batch_dim, seq_dim, model_dim)
+    "k": (4, 0, 1, 2),
+    "v": (4, 0, 1, 2),
+    "kv_pos": (2, 0, 1, None),
+    "pos": (2, 0, 1, None),
+    "c_kv": (3, 0, 1, None),
+    "k_r": (3, 0, 1, None),
+    "conv": (3, 0, None, 2),
+    "h": (None, 0, None, 1),  # mamba state (B,H,N,P) or slstm (B,H,dh)
+    "C": (4, 0, None, 1),
+    "n": (3, 0, None, 1),
+    "c": (3, 0, None, 1),
+}
+
+
+def cache_pspecs(cache_tree, *, dp: tuple, seq_sharded: bool, model_axis="model"):
+    """dp: data-parallel axis name tuple, e.g. ("pod","data").
+    seq_sharded=True (long_500k): the KV sequence dim carries `dp` and the
+    batch dim is replicated; recurrent-state leaves stay replicated over dp."""
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name not in _CACHE_BASE:
+            raise ValueError(f"no cache rule for leaf {path}")
+        ndim_base, b_dim, s_dim, m_dim = _CACHE_BASE[name]
+        ndim_base = ndim_base or leaf.ndim  # "h" appears with 3 or 4 dims
+        extra = leaf.ndim - ndim_base
+        # count only genuine stacking prefixes
+        parts = [None] * leaf.ndim
+        if seq_sharded:
+            if s_dim is not None:
+                parts[extra + s_dim] = dp_spec
+            # batch=1: replicated over dp
+        else:
+            parts[extra + b_dim] = dp_spec
+        if m_dim is not None:
+            parts[extra + m_dim] = model_axis
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def batch_pspecs(batch_tree, *, dp: tuple, seq_sharded: bool = False):
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def leaf_spec(leaf):
+        if seq_sharded:
+            return P(*([None] * leaf.ndim))  # batch=1 decode: replicated
+        return P(*([dp_spec] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(leaf_spec, batch_tree)
+
+
+def cache_shapes(cfg: ModelConfig, tp, n_shards, b, s, s_src=None):
+    if cfg.family == "encdec":
+        fn = partial(
+            init_encdec_cache, cfg, tp, n_shards, b, s, s_src or s
+        )
+    else:
+        fn = partial(init_lm_cache, cfg, tp, n_shards, b, s)
+    return jax.eval_shape(fn)

@@ -1,0 +1,472 @@
+"""Train / serve step construction over the production mesh.
+
+One ``shard_map`` per step, manual collectives inside (Megatron-JAX style,
+check_vma disabled):
+
+  * forward/backward with TP collectives (psum over "model");
+  * gradients of REPLICATED params psum'd over "model" (each TP member holds
+    a partial contribution);
+  * IntSGD (or any baseline compressor) aggregates gradients across the
+    data-parallel axes — for IntSGD the wire carries ONLY integers (psum of
+    int32), the paper's contract;
+  * ZeRO-1 optimizer update on dp-sharded f32 masters, bf16 param
+    all-gather.
+
+The first optimization step uses exact (float) aggregation per paper §4.1 —
+drivers call the `exact` step once, then the compressed step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.comm import CommCtx
+from repro.core.compressor import Compressor, aggregate_exact
+from repro.core.stats import DxStats, TreeDims
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import dp_axes_of, dp_sizes_of
+from repro.models.common import Axes
+from repro.models.decode import init_lm_cache, lm_decode_step, tp_greedy
+from repro.models.encdec import (
+    encdec_decode_step,
+    encdec_loss,
+    encode as encdec_encode,
+    init_encdec_params,
+)
+from repro.models.transformer import (
+    init_lm_params,
+    lm_forward,
+    lm_logits_local,
+    lm_loss,
+)
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.zero1 import zero1_init, zero1_state_specs, zero1_update
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _dp_spec(dp):
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _replicated_mask(pspecs):
+    return jax.tree.map(lambda s: all(p is None for p in s), pspecs)
+
+
+def _fix_replicated_grads(grads, rep_mask, model_axis):
+    """Replicated params receive partial grads on each TP member; sum them."""
+    return jax.tree.map(
+        lambda g, rep: lax.psum(g, model_axis) if rep else g, grads, rep_mask
+    )
+
+
+def _global_dx_stats(updates, rep_mask, model_axis) -> DxStats:
+    """GLOBAL ||Δx||² from local shards with ONE psum of a stacked vector."""
+    leaf_sq = jax.tree.map(
+        lambda u: jnp.sum(jnp.square(u.astype(jnp.float32))), updates
+    )
+    leaves, treedef = jax.tree.flatten(leaf_sq)
+    reps = jax.tree.leaves(rep_mask)
+    vec = jnp.stack(leaves)
+    if model_axis is not None:
+        sharded_vec = jnp.where(jnp.asarray(reps), 0.0, vec)
+        rep_vec = jnp.where(jnp.asarray(reps), vec, 0.0)
+        vec = lax.psum(sharded_vec, model_axis) + rep_vec
+    leaf_sq = jax.tree.unflatten(treedef, list(vec))
+    return DxStats(sq=jnp.sum(vec), leaf_sq=leaf_sq)
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    """Everything the dry-run / trainer needs for one (arch, shape, mesh)."""
+
+    jitted: Any
+    arg_structs: tuple  # ShapeDtypeStructs (global)
+    in_shardings: tuple
+    out_shardings: Any
+    abstract_state: Any  # init-time state structs (for real runs)
+
+
+def _shardings(mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _zero1_shapes_global(local_state, tp):
+    def up(l):
+        if l.ndim >= 2:
+            return jax.ShapeDtypeStruct((l.shape[0], l.shape[1] * tp), l.dtype)
+        return l
+
+    return jax.tree.map(up, local_state)
+
+
+def _comp_state_shapes(comp: Compressor, cfg, tp, n_dp):
+    """Compressor state with a leading dp axis (per-worker state, e.g.
+    IntDIANA shifts / EF buffers), via the global/local diff trick."""
+    g_params = specs_mod.param_shapes(cfg, tp, 1)
+    l_params = specs_mod.param_shapes(cfg, tp, tp)
+    gs = jax.eval_shape(comp.init, g_params)
+    ls = jax.eval_shape(comp.init, l_params)
+
+    def spec(gl, lo):
+        if gl.shape == lo.shape:
+            base = [None] * len(gl.shape)
+        else:
+            diff = [i for i, (a, b) in enumerate(zip(gl.shape, lo.shape)) if a != b]
+            base = [None] * len(gl.shape)
+            base[diff[0]] = "model"
+        return base
+
+    pspecs = jax.tree.map(spec, gs, ls)
+    glob = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_dp,) + x.shape, x.dtype), gs
+    )
+    return glob, pspecs
+
+
+def _loss_fn_for(cfg: ModelConfig):
+    return encdec_loss if cfg.family == "encdec" else lm_loss
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def build_train_step(
+    cfg: ModelConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    compressor: Compressor,
+    base_opt: Optimizer,
+    lr_schedule: Callable,
+    param_dtype=jnp.bfloat16,
+    exact_first: bool = False,
+    donate: bool = True,
+    tp_override: Optional[int] = None,
+) -> StepArtifacts:
+    from repro.launch.inputs import input_specs
+
+    tp = tp_override if tp_override is not None else mesh.shape["model"]
+    if tp == 1:
+        # tiny-model axis remap: the whole mesh becomes data-parallel; the
+        # model is replicated and IntSGD aggregates over every chip
+        dp = tuple(mesh.axis_names)
+    else:
+        dp = dp_axes_of(mesh)
+    dp_sizes = tuple(mesh.shape[a] for a in dp)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    axes = Axes(tp="model", tp_size=tp) if tp > 1 else Axes()
+    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
+    loss_fn = _loss_fn_for(cfg)
+
+    g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
+    g_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), g_shapes
+    )
+    rep_mask = _replicated_mask(pspecs)
+    dims = specs_mod.global_tree_dims(cfg, tp)
+
+    l_params = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), l_shapes
+    )
+    opt_local = jax.eval_shape(partial(zero1_init, base_opt, n_dp=n_dp), l_params)
+    opt_global = _zero1_shapes_global(opt_local, tp)
+    opt_specs = zero1_state_specs(
+        opt_local, _dp_spec(dp), model_axis="model" if tp > 1 else None
+    )
+    comp_global, comp_leaf_specs = _comp_state_shapes(compressor, cfg, tp, n_dp)
+    comp_specs = jax.tree.map(
+        lambda x, base: P(*([_dp_spec(dp)] + list(base))),
+        comp_global,
+        comp_leaf_specs,
+    )
+
+    batch_struct = input_specs(cfg, shape, kind="train")
+    batch_specs = specs_mod.batch_pspecs(batch_struct, dp=dp)
+
+    def step(params, opt_state, comp_state, step_idx, key, batch, *, exact):
+        eta = lr_schedule(step_idx)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, axes, cfg, dtype=jnp.bfloat16)
+        )(params)
+        if tp > 1:
+            grads = _fix_replicated_grads(grads, rep_mask, "model")
+        cs = jax.tree.map(lambda x: x[0] if x.ndim >= 1 else x, comp_state)
+        if exact:
+            ghat = aggregate_exact(grads, ctx)
+            metrics = (jnp.zeros(()), jnp.zeros(()))
+        else:
+            ghat, cs, m = compressor.aggregate(
+                cs, grads, key=jax.random.fold_in(key, 1), eta=eta, ctx=ctx, dims=dims
+            )
+            m_axes = dp + (("model",) if tp > 1 else ())
+            metrics = (
+                lax.pmax(m.max_int, m_axes),
+                lax.pmax(m.bits_per_coord, m_axes),
+            )
+        dp_index = ctx.worker_index()
+        new_params, new_opt = zero1_update(
+            base_opt,
+            opt_state,
+            ghat,
+            eta,
+            dp_axes=dp,
+            dp_index=dp_index,
+            n_dp=n_dp,
+            param_dtype=param_dtype,
+            params_like=params,
+        )
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            new_params,
+            params,
+        )
+        dx_stats = _global_dx_stats(delta, rep_mask, "model" if tp > 1 else None)
+        cs = compressor.observe_update(cs, dx_stats)
+        new_comp = jax.tree.map(lambda x: x[None] if x.ndim >= 0 else x, cs)
+        new_comp = jax.tree.map(
+            lambda x, like: x.reshape(like.shape), new_comp, comp_state
+        )
+        loss_g = lax.psum(loss, dp) / n_dp
+        return new_params, new_opt, new_comp, loss_g, metrics
+
+    in_specs = (
+        pspecs,
+        opt_specs,
+        comp_specs,
+        P(),
+        P(),
+        batch_specs,
+    )
+    out_specs = (pspecs, opt_specs, comp_specs, P(), (P(), P()))
+
+    def make(exact):
+        sm = jax.shard_map(
+            partial(step, exact=exact),
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+        return jax.jit(
+            sm,
+            in_shardings=_shardings(mesh, in_specs),
+            out_shardings=_shardings(mesh, out_specs),
+            donate_argnums=(0, 1, 2) if donate else (),
+        )
+
+    arg_structs = (
+        g_shapes,
+        opt_global,
+        comp_global,
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+        batch_struct,
+    )
+    return StepArtifacts(
+        jitted={"compressed": make(False), "exact": make(True)},
+        arg_structs=arg_structs,
+        in_shardings=_shardings(mesh, in_specs),
+        out_shardings=_shardings(mesh, out_specs),
+        abstract_state=None,
+    )
+
+
+def build_init_state(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    compressor: Compressor,
+    base_opt: Optimizer,
+):
+    """jitted (global params) -> (opt_state, comp_state) with correct
+    ZeRO-1 layout (masters == initial params) and dp-stacked compressor
+    state."""
+    dp = dp_axes_of(mesh)
+    dp_sizes = dp_sizes_of(mesh)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    tp = mesh.shape["model"]
+    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
+    _, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
+    l_params_f32 = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), l_shapes
+    )
+    opt_local = jax.eval_shape(
+        partial(zero1_init, base_opt, n_dp=n_dp), l_params_f32
+    )
+    opt_specs = zero1_state_specs(
+        opt_local, _dp_spec(dp), model_axis="model" if tp > 1 else None
+    )
+    comp_global, comp_leaf_specs = _comp_state_shapes(compressor, cfg, tp, n_dp)
+    comp_specs = jax.tree.map(
+        lambda x, base: P(*([_dp_spec(dp)] + list(base))),
+        comp_global,
+        comp_leaf_specs,
+    )
+
+    from repro.optim.zero1 import shard_leaf
+
+    def init_fn(params):
+        dp_index = ctx.worker_index()
+        masters_full = jax.tree.map(lambda p: shard_leaf(p, n_dp), params)
+        my = jax.tree.map(
+            lambda m: lax.dynamic_slice_in_dim(m, dp_index, 1, 0), masters_full
+        )
+        base_state = base_opt.init(jax.tree.map(lambda m: m[0], my))
+        restack = lambda t: jax.tree.map(
+            lambda x: x[None] if x.ndim >= 1 else x, t
+        )
+        opt_state = {"master": my, "base": restack(base_state)}
+        cs = compressor.init(params)
+        cs = jax.tree.map(lambda x: jnp.asarray(x)[None], cs)
+        return opt_state, cs
+
+    sm = jax.shard_map(
+        init_fn,
+        mesh=mesh,
+        in_specs=(pspecs,),
+        out_specs=(opt_specs, comp_specs),
+        check_vma=False,
+    )
+    return jax.jit(
+        sm,
+        in_shardings=(_shardings(mesh, pspecs),),
+        out_shardings=_shardings(mesh, (opt_specs, comp_specs)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+def build_serve_step(
+    cfg: ModelConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    param_dtype=jnp.bfloat16,
+) -> StepArtifacts:
+    from repro.launch.inputs import input_specs
+
+    dp = dp_axes_of(mesh)
+    dp_sizes = dp_sizes_of(mesh)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    tp = mesh.shape["model"]
+    seq_sharded = shape.kind == "decode" and shape.global_batch < n_dp
+    if seq_sharded:
+        axes = Axes(tp="model", tp_size=tp, sp=dp, sp_sizes=dp_sizes)
+        b_local = shape.global_batch
+        s_local = shape.seq_len // n_dp
+    else:
+        axes = Axes(tp="model", tp_size=tp)
+        b_local = max(1, shape.global_batch // n_dp)
+        s_local = shape.seq_len
+
+    g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
+    g_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), g_shapes
+    )
+
+    if shape.kind == "prefill":
+        batch_struct = input_specs(cfg, shape, kind="prefill")
+        batch_specs = specs_mod.batch_pspecs(batch_struct, dp=dp)
+
+        def prefill(params, batch):
+            if cfg.family == "encdec":
+                h = encdec_encode(params, batch["frames"], axes, cfg)
+                logits = jnp.einsum(
+                    "btd,dv->btv", h[:, -1:], params["lm_head"].astype(h.dtype)
+                ).astype(jnp.float32)[:, 0]
+            else:
+                h = lm_forward(params, batch, axes, cfg)
+                logits = lm_logits_local(params, h[:, -1:], cfg)[:, 0]
+            return logits
+
+        in_specs = (pspecs, batch_specs)
+        out_specs = P(_dp_spec(dp), "model")
+        sm = jax.shard_map(
+            prefill, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        jitted = jax.jit(sm, in_shardings=_shardings(mesh, in_specs))
+        arg_structs = (g_shapes, batch_struct)
+        return StepArtifacts(
+            jitted={"prefill": jitted},
+            arg_structs=arg_structs,
+            in_shardings=_shardings(mesh, in_specs),
+            out_shardings=None,
+            abstract_state=None,
+        )
+
+    # decode
+    cache_local = specs_mod.cache_shapes(
+        cfg, tp, tp, b_local, s_local, s_src=min(shape.seq_len, 32768)
+    )
+    cache_specs = specs_mod.cache_pspecs(
+        cache_local, dp=dp, seq_sharded=seq_sharded
+    )
+
+    def to_global(struct, spec):
+        shape_l = list(struct.shape)
+        for i, p in enumerate(spec):
+            if p is None:
+                continue
+            size = tp if p == "model" else n_dp
+            shape_l[i] = shape_l[i] * size
+        return jax.ShapeDtypeStruct(tuple(shape_l), struct.dtype)
+
+    cache_global = jax.tree.map(
+        to_global, cache_local, cache_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    tok_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_spec = P() if seq_sharded else P(_dp_spec(dp))
+
+    def decode(params, cache, tokens, pos):
+        if cfg.family == "encdec":
+            logits, new_cache = encdec_decode_step(
+                params, cache, tokens, pos, axes, cfg
+            )
+        else:
+            logits, new_cache = lm_decode_step(params, cache, tokens, pos, axes, cfg)
+        next_tok = tp_greedy(logits, axes)
+        return next_tok, new_cache
+
+    in_specs = (pspecs, cache_specs, tok_spec, tok_spec)
+    out_specs = (tok_spec, cache_specs)
+    sm = jax.shard_map(
+        decode, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    jitted = jax.jit(
+        sm,
+        in_shardings=_shardings(mesh, in_specs),
+        out_shardings=_shardings(mesh, out_specs),
+        donate_argnums=(1,),
+    )
+    arg_structs = (g_shapes, cache_global, tok_struct, pos_struct)
+    return StepArtifacts(
+        jitted={"decode": jitted},
+        arg_structs=arg_structs,
+        in_shardings=_shardings(mesh, in_specs),
+        out_shardings=_shardings(mesh, out_specs),
+        abstract_state=None,
+    )

@@ -1,0 +1,219 @@
+"""GQA attention: chunked (flash-style) causal training path, KV-cache decode
+path, sliding-window support, optional QKV bias, and a distributed
+online-softmax decode for sequence-parallel (SP) KV shards.
+
+The training path streams KV in chunks with a running (max, sum, acc) online
+softmax so per-device activation memory is O(T·d) instead of O(T²) — the
+memory-roofline enabler for the 32k prefill shapes. Wrapped in jax.checkpoint
+by the caller so the backward pass recomputes chunk scores.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Axes, HeadLayout, dense_init, rope
+
+NEG_INF = -1e30
+
+
+def init_attn_params(key, d_model, layout: HeadLayout, *, bias=False, dtype=jnp.float32):
+    """LOCAL parameter shard for one layer (shapes already divided by tp)."""
+    ks = jax.random.split(key, 4)
+    nq, nkv, dh = layout.q_local, layout.kv_local, layout.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d_model, nq * dh), d_model, dtype),
+        "wk": dense_init(ks[1], (d_model, nkv * dh), d_model, dtype),
+        "wv": dense_init(ks[2], (d_model, nkv * dh), d_model, dtype),
+        "wo": dense_init(ks[3], (nq * dh, d_model), nq * dh, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((nq * dh,), dtype)
+        p["bk"] = jnp.zeros((nkv * dh,), dtype)
+        p["bv"] = jnp.zeros((nkv * dh,), dtype)
+    return p
+
+
+def _chunked_attn(
+    q, k, v, q_pos, kv_pos, *, window: int | None, chunk: int, causal: bool = True
+):
+    """Online-softmax attention.
+    q: (B, Tq, Hq, dh); k,v: (B, Tk, Hkv, dh); *_pos: (B, T) int32.
+    Causal: q_pos >= kv_pos; window: kv_pos > q_pos - window.
+    Returns (B, Tq, Hq, dh)."""
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    nchunks = (tk + chunk - 1) // chunk
+    pad = nchunks * chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    # (B, Hkv, group, Tq, dh) query view
+    qh = q.reshape(b, tq, hkv, group, dh).transpose(0, 2, 3, 1, 4)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    kc = k.reshape(b, nchunks, chunk, hkv, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nchunks, chunk, hkv, dh).transpose(1, 0, 3, 2, 4)
+    pc = kv_pos.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m, s, acc = carry
+        kb, vb, pb = xs  # (B,Hkv,chunk,dh), (B,Hkv,chunk,dh), (B,chunk)
+        logits = (
+            jnp.einsum("bhgqd,bhcd->bhgqc", qh.astype(jnp.float32), kb.astype(jnp.float32))
+            * scale
+        )
+        if causal:
+            mask = pb[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        else:
+            mask = pb[:, None, None, None, :] < 2**29  # only exclude padding
+        if window is not None:
+            mask &= pb[:, None, None, None, :] > (
+                q_pos[:, None, None, :, None] - window
+            )
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, s_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, tq), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((b, hkv, group, tq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, tq, dh), jnp.float32)
+    (m, s, acc), _ = lax.scan(body, (m0, s0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, dh).astype(q.dtype)
+
+
+def attention_train(
+    params,
+    x,
+    positions,
+    axes: Axes,
+    layout: HeadLayout,
+    *,
+    window: int | None = None,
+    rope_theta: float = 10000.0,
+    chunk: int = 1024,
+):
+    """Full causal self-attention over x: (B, T, d). Column-parallel QKV,
+    row-parallel output proj."""
+    b, t, _ = x.shape
+    nq, nkv, dh = layout.q_local, layout.kv_local, layout.head_dim
+    q = jnp.einsum("btd,dk->btk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dk->btk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dk->btk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = rope(q.reshape(b, t, nq, dh), positions, rope_theta)
+    k = rope(k.reshape(b, t, nkv, dh), positions, rope_theta)
+    v = v.reshape(b, t, nkv, dh)
+    ckpt_attn = jax.checkpoint(
+        partial(_chunked_attn, window=window, chunk=min(chunk, t))
+    )
+    out = ckpt_attn(q, k, v, positions, positions)
+    out = jnp.einsum(
+        "btk,kd->btd", out.reshape(b, t, nq * dh), params["wo"].astype(x.dtype)
+    )
+    return axes.psum_tp(out)
+
+
+def attention_decode(
+    params,
+    x,
+    pos,
+    cache,
+    axes: Axes,
+    layout: HeadLayout,
+    *,
+    window: int | None = None,
+    rope_theta: float = 10000.0,
+):
+    """One-token decode. x: (B, 1, d); pos: (B,) int32 current position.
+    cache: {"k","v": (B, S_loc, Hkv_loc, dh), "kv_pos": (B, S_loc)}.
+    If axes.sp is set the cache sequence dim is sharded over axes.sp and the
+    softmax is combined across shards (distributed online softmax); the new
+    KV is written only on the owning shard.
+    Returns (out: (B,1,d), new_cache)."""
+    b = x.shape[0]
+    nq, nkv, dh = layout.q_local, layout.kv_local, layout.head_dim
+    q = jnp.einsum("btd,dk->btk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dk->btk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dk->btk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = rope(q.reshape(b, 1, nq, dh), pos[:, None], rope_theta)
+    k_new = rope(k.reshape(b, 1, nkv, dh), pos[:, None], rope_theta)
+    v_new = v.reshape(b, 1, nkv, dh)
+
+    s_loc = cache["k"].shape[1]
+    if axes.sp:
+        shard = axes.sp_index()
+        slot = pos - shard * s_loc  # local write position
+        write_ok = (slot >= 0) & (slot < s_loc)
+    else:
+        slot = pos
+        write_ok = jnp.ones((b,), bool)
+    slot_c = jnp.clip(slot, 0, s_loc - 1)
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, slot_c].set(
+        jnp.where(write_ok[:, None, None], k_new[:, 0], cache["k"][bidx, slot_c])
+    )
+    v_cache = cache["v"].at[bidx, slot_c].set(
+        jnp.where(write_ok[:, None, None], v_new[:, 0], cache["v"][bidx, slot_c])
+    )
+    kv_pos = cache["kv_pos"].at[bidx, slot_c].set(
+        jnp.where(write_ok, pos, cache["kv_pos"][bidx, slot_c])
+    )
+
+    group = nq // nkv
+    qh = q.reshape(b, nkv, group, dh)  # Tq=1 folded away
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = (
+        jnp.einsum(
+            "bhgd,bshd->bhgs",
+            qh.astype(jnp.float32),
+            k_cache.astype(jnp.float32),
+        )
+        * scale
+    )
+    mask = kv_pos[:, None, None, :] <= pos[:, None, None, None]
+    if window is not None:
+        mask &= kv_pos[:, None, None, :] > (pos[:, None, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m_loc = jnp.max(logits, axis=-1)
+    if axes.sp:
+        m = lax.pmax(m_loc, axes.sp)
+    else:
+        m = m_loc
+    p = jnp.exp(logits - m[..., None])
+    s = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    if axes.sp:
+        s = lax.psum(s, axes.sp)
+        acc = lax.psum(acc, axes.sp)
+    out = (acc / jnp.maximum(s, 1e-30)[..., None]).reshape(b, 1, nq * dh)
+    out = jnp.einsum("btk,kd->btd", out.astype(x.dtype), params["wo"].astype(x.dtype))
+    out = axes.psum_tp(out)
+    new_cache = dict(cache, k=k_cache, v=v_cache, kv_pos=kv_pos)
+    return out, new_cache
+
+
+def init_cache(b_local, s_local, layout: HeadLayout, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((b_local, s_local, layout.kv_local, layout.head_dim), dtype),
+        "v": jnp.zeros((b_local, s_local, layout.kv_local, layout.head_dim), dtype),
+        "kv_pos": jnp.full((b_local, s_local), 2**30, jnp.int32),
+    }

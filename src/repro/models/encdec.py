@@ -1,0 +1,243 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over precomputed audio-frame
+embeddings (the modality frontend is a stub per the assignment — the dry-run
+``input_specs`` supplies (B, T_src, frontend_dim) frames). Decoder: causal
+self-attention + cross-attention to encoder states, teacher-forced CE.
+
+Decode path caches per-layer self-attention KV plus the cross-attention KV
+projected once from the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models.attention import _chunked_attn, NEG_INF
+from repro.models.common import (
+    Axes,
+    dense_init,
+    embed_lookup,
+    layernorm,
+    rope,
+    tp_cross_entropy,
+)
+from repro.models.mlp import gelu_mlp, init_gelu
+from repro.models.transformer import resolve_dims
+
+
+def _init_ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p):
+    return layernorm(x, p["w"], p["b"])
+
+
+def _init_enc_layer(key, cfg, dims, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "attn": attn.init_attn_params(ks[0], cfg.d_model, dims.layout, dtype=dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": init_gelu(ks[1], cfg.d_model, dims.d_ff_loc, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dims, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "self_attn": attn.init_attn_params(ks[0], cfg.d_model, dims.layout, dtype=dtype),
+        "ln_x": _init_ln(cfg.d_model, dtype),
+        "cross_attn": attn.init_attn_params(ks[1], cfg.d_model, dims.layout, dtype=dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": init_gelu(ks[2], cfg.d_model, dims.d_ff_loc, dtype),
+    }
+
+
+def init_encdec_params(key, cfg, tp: int = 1, n_shards: int = 1, dtype=jnp.float32):
+    dims = resolve_dims(cfg, tp, n_shards)
+    ks = jax.random.split(key, 6)
+    ek = jax.random.split(ks[0], cfg.enc_layers)
+    dk = jax.random.split(ks[1], cfg.dec_layers)
+    return {
+        "frontend_proj": dense_init(ks[2], (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim, dtype),
+        "embed": dense_init(ks[3], (dims.vocab_loc, cfg.d_model), cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dims, dtype))(ek),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dims, dtype))(dk),
+        "ln_enc": _init_ln(cfg.d_model, dtype),
+        "ln_dec": _init_ln(cfg.d_model, dtype),
+        "lm_head": dense_init(ks[4], (cfg.d_model, dims.vocab_loc), cfg.d_model, dtype),
+    }
+
+
+def _cross_attention(p, x, enc_kv, q_pos, kv_pos, axes, dims):
+    """x: (B,Tq,d); enc_kv: (k,v) precomputed (B,Ts,Hkv_loc,dh)."""
+    b, tq, _ = x.shape
+    nq, dh = dims.layout.q_local, dims.layout.head_dim
+    q = jnp.einsum("btd,dk->btk", x, p["wq"].astype(x.dtype)).reshape(b, tq, nq, dh)
+    k, v = enc_kv
+    out = _chunked_attn(
+        q, k, v, q_pos, kv_pos, window=None, chunk=min(1024, k.shape[1]), causal=False
+    )
+    out = jnp.einsum(
+        "btk,kd->btd", out.reshape(b, tq, nq * dh), p["wo"].astype(x.dtype)
+    )
+    return axes.psum_tp(out)
+
+
+def _project_enc_kv(p, enc_out, dims):
+    b, ts, _ = enc_out.shape
+    nkv, dh = dims.layout.kv_local, dims.layout.head_dim
+    k = jnp.einsum("btd,dk->btk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dk->btk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k.reshape(b, ts, nkv, dh), v.reshape(b, ts, nkv, dh)
+
+
+def encode(params, frames, axes: Axes, cfg, dtype=jnp.bfloat16):
+    """frames: (B, Ts, frontend_dim) -> encoder states (B, Ts, d)."""
+    x = jnp.einsum(
+        "btf,fd->btd", frames.astype(dtype), params["frontend_proj"].astype(dtype)
+    )
+    b, ts = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(ts, dtype=jnp.int32), (b, ts))
+    dims = resolve_dims(cfg, axes.tp_size, axes.tp_size)
+
+    def body(h, lp):
+        def f(hh, pp):
+            z = _ln(hh, pp["ln1"])
+            bq, tq, _ = z.shape
+            nq, nkv, dh = dims.layout.q_local, dims.layout.kv_local, dims.layout.head_dim
+            q = jnp.einsum("btd,dk->btk", z, pp["attn"]["wq"].astype(z.dtype))
+            k = jnp.einsum("btd,dk->btk", z, pp["attn"]["wk"].astype(z.dtype))
+            v = jnp.einsum("btd,dk->btk", z, pp["attn"]["wv"].astype(z.dtype))
+            q = rope(q.reshape(bq, tq, nq, dh), positions)
+            k = rope(k.reshape(bq, tq, nkv, dh), positions)
+            a = _chunked_attn(
+                q, k, v.reshape(bq, tq, nkv, dh), positions, positions,
+                window=None, chunk=min(1024, tq), causal=False,
+            )
+            a = jnp.einsum(
+                "btk,kd->btd", a.reshape(bq, tq, nq * dh), pp["attn"]["wo"].astype(z.dtype)
+            )
+            hh = hh + axes.psum_tp(a)
+            hh = hh + gelu_mlp(pp["mlp"], _ln(hh, pp["ln2"]), axes)
+            return hh
+
+        return jax.checkpoint(f)(h, lp), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["ln_enc"])
+
+
+def encdec_loss(params, batch, axes: Axes, cfg, dtype=jnp.bfloat16):
+    """batch: frames (B,Ts,fd), tokens (B,Tt), labels (B,Tt)."""
+    enc_out = encode(params, batch["frames"], axes, cfg, dtype)
+    dims = resolve_dims(cfg, axes.tp_size, axes.tp_size)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, axes).astype(dtype)
+    b, tt = x.shape[:2]
+    ts = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(tt, dtype=jnp.int32), (b, tt))
+    enc_pos = jnp.broadcast_to(jnp.arange(ts, dtype=jnp.int32), (b, ts))
+
+    def body(h, lp):
+        def f(hh, pp):
+            z = _ln(hh, pp["ln1"])
+            hh = hh + attn.attention_train(
+                pp["self_attn"], z, positions, axes, dims.layout
+            )  # causal self-attention
+            kv = _project_enc_kv(pp["cross_attn"], enc_out, dims)
+            hh = hh + _cross_attention(
+                pp["cross_attn"], _ln(hh, pp["ln_x"]), kv, positions, enc_pos, axes, dims
+            )
+            hh = hh + gelu_mlp(pp["mlp"], _ln(hh, pp["ln2"]), axes)
+            return hh
+
+        return jax.checkpoint(f)(h, lp), None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["ln_dec"])
+    logits = jnp.einsum(
+        "btd,dv->btv", x, params["lm_head"].astype(x.dtype)
+    ).astype(jnp.float32)
+    labels = batch["labels"]
+    per_tok = tp_cross_entropy(logits, labels, axes)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_encdec_cache(cfg, tp, n_shards, b_local, s_local, s_src, dtype=jnp.bfloat16):
+    dims = resolve_dims(cfg, tp, n_shards)
+    L = cfg.dec_layers
+    nkv, dh = dims.layout.kv_local, dims.layout.head_dim
+    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), t)
+    self_c = attn.init_cache(b_local, s_local, dims.layout, dtype)
+    cross = {
+        "k": jnp.zeros((b_local, s_src, nkv, dh), dtype),
+        "v": jnp.zeros((b_local, s_src, nkv, dh), dtype),
+        "pos": jnp.zeros((b_local, s_src), jnp.int32),
+    }
+    return {"self": stack(self_c), "cross": stack(cross)}
+
+
+def encdec_prefill(params, frames, cache, axes: Axes, cfg, dtype=jnp.bfloat16):
+    """Run the encoder and fill the cross-attention KV cache."""
+    enc_out = encode(params, frames, axes, cfg, dtype)
+    dims = resolve_dims(cfg, axes.tp_size, axes.tp_size)
+    b, ts = enc_out.shape[:2]
+
+    def per_layer(lp):
+        k, v = _project_enc_kv(lp["cross_attn"], enc_out, dims)
+        return {
+            "k": k.astype(dtype),
+            "v": v.astype(dtype),
+            "pos": jnp.broadcast_to(jnp.arange(ts, dtype=jnp.int32), (b, ts)),
+        }
+
+    cross = jax.vmap(per_layer)(params["dec_layers"])
+    return dict(cache, cross=cross)
+
+
+def encdec_decode_step(params, cache, tokens, pos, axes: Axes, cfg, dtype=jnp.bfloat16):
+    dims = resolve_dims(cfg, axes.tp_size, axes.tp_size)
+    x = embed_lookup(params["embed"], tokens[:, None], axes).astype(dtype)
+
+    def body(h, xs):
+        lp, sc, cc = xs
+        a, new_sc = attn.attention_decode(
+            lp["self_attn"], _ln(h, lp["ln1"]), pos, sc, axes, dims.layout
+        )
+        h = h + a
+        z = _ln(h, lp["ln_x"])
+        b = z.shape[0]
+        nq, dh = dims.layout.q_local, dims.layout.head_dim
+        nkv = dims.layout.kv_local
+        group = nq // nkv
+        q = jnp.einsum("btd,dk->btk", z, lp["cross_attn"]["wq"].astype(z.dtype))
+        qh = q.reshape(b, nkv, group, dh)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        logits = (
+            jnp.einsum("bhgd,bshd->bhgs", qh.astype(jnp.float32), cc["k"].astype(jnp.float32))
+            * scale
+        )
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", w, cc["v"].astype(jnp.float32))
+        o = o.reshape(b, 1, nq * dh).astype(z.dtype)
+        o = jnp.einsum("btk,kd->btd", o, lp["cross_attn"]["wo"].astype(z.dtype))
+        h = h + axes.psum_tp(o)
+        h = h + gelu_mlp(lp["mlp"], _ln(h, lp["ln2"]), axes)
+        return h, new_sc
+
+    x, new_self = lax.scan(body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = _ln(x, params["ln_dec"])
+    logits = jnp.einsum(
+        "btd,dv->btv", x, params["lm_head"].astype(x.dtype)
+    ).astype(jnp.float32)[:, 0]
+    return logits, dict(cache, self=new_self)

@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — low-rank KV compression.
+
+Structure (per DeepSeek-V2 paper):
+  c_kv = x @ W_dkv                      (T, kv_lora)      shared latent
+  k_c, v = c_kv @ W_uk, c_kv @ W_uv     per-head decompress (TP-sharded)
+  k_rope = x @ W_kr                     (T, dh_rope)      shared rotary key
+  q      = x @ W_q  (per head: content part + rotary part)
+
+The latent cache (c_kv + k_rope) is what decode stores — kv_lora(512) +
+dh_rope(64) floats per token instead of 2·H·dh: the paper's KV-cache
+compression. The latent projections are replicated (small); per-head
+decompression matrices are column-parallel over TP.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, dense_init, rope
+from repro.models.attention import _chunked_attn, NEG_INF
+
+DH_ROPE = 64
+
+
+def init_mla_params(
+    key, d_model, n_heads_local, head_dim, kv_lora, dtype=jnp.float32
+):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dkv": dense_init(ks[0], (d_model, kv_lora), d_model, dtype),
+        "w_kr": dense_init(ks[1], (d_model, DH_ROPE), d_model, dtype),
+        "w_uk": dense_init(ks[2], (kv_lora, n_heads_local * head_dim), kv_lora, dtype),
+        "w_uv": dense_init(ks[3], (kv_lora, n_heads_local * head_dim), kv_lora, dtype),
+        "w_q": dense_init(
+            ks[4], (d_model, n_heads_local * (head_dim + DH_ROPE)), d_model, dtype
+        ),
+        "wo": dense_init(
+            ks[5], (n_heads_local * head_dim, d_model), n_heads_local * head_dim, dtype
+        ),
+    }
+
+
+def _split_q(q, n_heads, head_dim):
+    q = q.reshape(q.shape[:-1] + (n_heads, head_dim + DH_ROPE))
+    return q[..., :head_dim], q[..., head_dim:]
+
+
+def mla_train(
+    params, x, positions, axes: Axes, *, n_heads_local, head_dim, chunk=1024
+):
+    b, t, _ = x.shape
+    c_kv = jnp.einsum("btd,dl->btl", x, params["w_dkv"].astype(x.dtype))
+    k_r = jnp.einsum("btd,dr->btr", x, params["w_kr"].astype(x.dtype))
+    k_r = rope(k_r.reshape(b, t, 1, DH_ROPE), positions)
+    k_c = jnp.einsum("btl,lk->btk", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btl,lk->btk", c_kv, params["w_uv"].astype(x.dtype))
+    q = jnp.einsum("btd,dk->btk", x, params["w_q"].astype(x.dtype))
+    q_c, q_r = _split_q(q, n_heads_local, head_dim)
+    q_r = rope(q_r, positions)
+    # concat content + rotary parts; K rotary part shared across heads
+    q_full = jnp.concatenate([q_c, q_r], axis=-1)
+    k_full = jnp.concatenate(
+        [
+            k_c.reshape(b, t, n_heads_local, head_dim),
+            jnp.broadcast_to(k_r, (b, t, n_heads_local, DH_ROPE)),
+        ],
+        axis=-1,
+    )
+    v = v.reshape(b, t, n_heads_local, head_dim)
+    # pad V up to q/k feature dim for the shared chunked kernel, slice after
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, DH_ROPE)))
+    ckpt = jax.checkpoint(partial(_chunked_attn, window=None, chunk=min(chunk, t)))
+    out = ckpt(q_full, k_full, vpad, positions, positions)[..., :head_dim]
+    out = jnp.einsum(
+        "btk,kd->btd",
+        out.reshape(b, t, n_heads_local * head_dim),
+        params["wo"].astype(x.dtype),
+    )
+    return axes.psum_tp(out)
+
+
+def init_mla_cache(b_local, s_local, kv_lora, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((b_local, s_local, kv_lora), dtype),
+        "k_r": jnp.zeros((b_local, s_local, DH_ROPE), dtype),
+        "kv_pos": jnp.full((b_local, s_local), 2**30, jnp.int32),
+    }
+
+
+def mla_decode(params, x, pos, cache, axes: Axes, *, n_heads_local, head_dim):
+    """One-token decode against the latent cache. x: (B,1,d)."""
+    b = x.shape[0]
+    c_new = jnp.einsum("btd,dl->btl", x, params["w_dkv"].astype(x.dtype))[:, 0]
+    k_r_new = jnp.einsum("btd,dr->btr", x, params["w_kr"].astype(x.dtype))
+    k_r_new = rope(k_r_new.reshape(b, 1, 1, DH_ROPE), pos[:, None])[:, 0, 0]
+
+    s_loc = cache["c_kv"].shape[1]
+    bidx = jnp.arange(b)
+    slot = jnp.clip(pos, 0, s_loc - 1)
+    c_cache = cache["c_kv"].at[bidx, slot].set(c_new.astype(cache["c_kv"].dtype))
+    kr_cache = cache["k_r"].at[bidx, slot].set(k_r_new.astype(cache["k_r"].dtype))
+    kv_pos = cache["kv_pos"].at[bidx, slot].set(pos)
+
+    # decompress cached latents (the flop trade the MLA paper makes)
+    k_c = jnp.einsum("bsl,lk->bsk", c_cache.astype(x.dtype), params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsl,lk->bsk", c_cache.astype(x.dtype), params["w_uv"].astype(x.dtype))
+    k_c = k_c.reshape(b, s_loc, n_heads_local, head_dim)
+    v = v.reshape(b, s_loc, n_heads_local, head_dim)
+
+    q = jnp.einsum("btd,dk->btk", x, params["w_q"].astype(x.dtype))
+    q_c, q_r = _split_q(q, n_heads_local, head_dim)
+    q_r = rope(q_r, pos[:, None])
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim + DH_ROPE, jnp.float32))
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q_c[:, 0].astype(jnp.float32), k_c.astype(jnp.float32)
+    )
+    logits += jnp.einsum(
+        "bhr,bsr->bhs", q_r[:, 0].astype(jnp.float32), kr_cache.astype(jnp.float32)
+    )
+    logits *= scale
+    mask = kv_pos[:, None, :] <= pos[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads_local * head_dim).astype(x.dtype)
+    out = jnp.einsum("btk,kd->btd", out, params["wo"].astype(x.dtype))
+    return axes.psum_tp(out), dict(cache, c_kv=c_cache, k_r=kr_cache, kv_pos=kv_pos)

@@ -1,0 +1,43 @@
+"""Dense MLP blocks: SwiGLU (llama family) and GeLU (classic), TP-sharded
+column→row parallel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, dense_init, swiglu
+
+
+def init_swiglu(key, d_model, d_ff_local, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff_local), d_model, dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff_local), d_model, dtype),
+        "w_down": dense_init(ks[2], (d_ff_local, d_model), d_ff_local, dtype),
+    }
+
+
+def swiglu_mlp(params, x, axes: Axes):
+    g = jnp.einsum("btd,df->btf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("btd,df->btf", x, params["w_up"].astype(x.dtype))
+    h = swiglu(g, u)
+    out = jnp.einsum("btf,fd->btd", h, params["w_down"].astype(x.dtype))
+    return axes.psum_tp(out)
+
+
+def init_gelu(key, d_model, d_ff_local, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], (d_model, d_ff_local), d_model, dtype),
+        "b_in": jnp.zeros((d_ff_local,), dtype),
+        "w_out": dense_init(ks[1], (d_ff_local, d_model), d_ff_local, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x, axes: Axes):
+    h = jnp.einsum("btd,df->btf", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_in"].astype(h.dtype))
+    out = jnp.einsum("btf,fd->btd", h, params["w_out"].astype(x.dtype))
+    out = axes.psum_tp(out)
+    return out + params["b_out"].astype(out.dtype)

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts with two sharding strategies, auto-selected:
+
+  * ``ep``  (n_experts % tp == 0, e.g. deepseek 64 experts / 16 devices):
+    classic expert parallelism — each device owns n_experts/tp experts;
+    tokens are dispatched with a capacity-factor buffer and exchanged via
+    all_to_all over the model axis, expert FFN runs on the owner, results
+    come back via the reverse all_to_all.
+
+  * ``tp``  (n_experts < tp, e.g. mixtral 8 experts / 16 devices): every
+    expert's FFN is tensor-sharded over the full model axis; tokens are
+    gathered per-expert into capacity buffers locally (no all_to_all) and
+    each expert runs as a column→row parallel MLP. Avoids replicated expert
+    weights, keeping the "sharded or replicated" parameter invariant.
+
+Both use top-k token-choice routing with probability renormalization and
+token dropping at capacity (Switch/Mixtral-style). Shared experts
+(DeepSeek-V2) are plain TP MLPs added unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Axes, dense_init, swiglu
+from repro.models.mlp import init_swiglu, swiglu_mlp
+
+
+def pick_strategy(n_experts: int, tp: int) -> str:
+    if tp == 1:
+        return "tp"
+    return "ep" if n_experts % tp == 0 else "tp"
+
+
+def init_moe_params(
+    key,
+    d_model,
+    d_ff,
+    n_experts,
+    axes_tp: int,
+    *,
+    n_shared: int = 0,
+    d_ff_shared: int | None = None,
+    dtype=jnp.float32,
+):
+    """Expert weights local shard. strategy=ep: (E_loc, d, d_ff) full d_ff;
+    strategy=tp: (E, d, d_ff/tp)."""
+    strategy = pick_strategy(n_experts, axes_tp)
+    ks = jax.random.split(key, 5)
+    if strategy == "ep":
+        e_loc, ff_loc = n_experts // axes_tp, d_ff
+    else:
+        e_loc, ff_loc = n_experts, d_ff // axes_tp
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), d_model, jnp.float32),
+        "w_gate": dense_init(ks[1], (e_loc, d_model, ff_loc), d_model, dtype),
+        "w_up": dense_init(ks[2], (e_loc, d_model, ff_loc), d_model, dtype),
+        "w_down": dense_init(ks[3], (e_loc, ff_loc, d_model), ff_loc, dtype),
+    }
+    if n_shared:
+        ff_sh = (d_ff_shared or d_ff * n_shared) // axes_tp
+        p["shared"] = init_swiglu(ks[4], d_model, ff_sh, dtype)
+    return p
+
+
+def _route(router_w, x, n_experts, top_k):
+    """x: (N, d) -> (weights (N, k), ids (N, k)) with renormalized probs."""
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, ids
+
+
+def _dispatch_indices(ids, w, n_experts, capacity):
+    """Compute per-(token,choice) target slot within its expert's capacity
+    buffer; over-capacity tokens are dropped (weight zeroed)."""
+    n, k = ids.shape
+    flat_e = ids.reshape(-1)  # (N*k,)
+    # position of each (token,choice) within its expert's arrival order
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (N*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    slot = jnp.sum(pos_in_e * onehot, axis=-1)  # (N*k,)
+    keep = slot < capacity
+    return flat_e, jnp.where(keep, slot, capacity - 1), keep
+
+
+def moe_tp(params, x, axes: Axes, *, n_experts, top_k, capacity_factor=1.25):
+    """TP-strategy MoE. x: (B, T, d) replicated across TP."""
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    w, ids = _route(params["router"], xf, n_experts, top_k)
+    capacity = max(8, int(n * top_k * capacity_factor / n_experts))
+    flat_e, slot, keep = _dispatch_indices(ids, w, n_experts, capacity)
+    # scatter tokens into (E, C, d) buffers
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    src = jnp.repeat(xf, top_k, axis=0)  # (N*k, d) token per choice
+    buf = buf.at[flat_e, slot].add(jnp.where(keep[:, None], src, 0))
+    # per-expert column->row parallel SwiGLU (batched over experts)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype))
+    h = swiglu(g, u)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    out_buf = axes.psum_tp(out_buf)
+    # gather back with routing weights
+    picked = out_buf[flat_e, slot]  # (N*k, d)
+    wk = (w.reshape(-1) * keep).astype(x.dtype)
+    out = jnp.sum((picked * wk[:, None]).reshape(n, top_k, d), axis=1)
+    out = out.reshape(b, t, d)
+    if "shared" in params:
+        out = out + swiglu_mlp(params["shared"], x, axes)
+    return out
+
+
+def moe_ep(params, x, axes: Axes, *, n_experts, top_k, capacity_factor=1.25):
+    """EP-strategy MoE: experts sharded over the model axis; token exchange
+    via all_to_all. x: (B, T, d) replicated across TP (each TP member handles
+    an equal slice of local tokens to avoid duplicate compute)."""
+    tp = axes.tp_size
+    b, t, d = x.shape
+    n_all = b * t
+    xf = x.reshape(n_all, d)
+    # each TP member routes its 1/tp slice of the tokens
+    if axes.tp:
+        n = n_all // tp
+        start = axes.tp_index() * n
+        xf = lax.dynamic_slice_in_dim(xf, start, n, axis=0)
+    else:
+        n = n_all
+    w, ids = _route(params["router"], xf, n_experts, top_k)
+    e_loc = n_experts // tp
+    # capacity per (device, expert) buffer
+    capacity = max(8, int(n * top_k * capacity_factor / n_experts))
+    flat_e, slot, keep = _dispatch_indices(ids, w, n_experts, capacity)
+    # dispatch buffer grouped by owner device: (tp, e_loc, C, d)
+    buf = jnp.zeros((tp, e_loc, capacity, d), x.dtype)
+    owner = flat_e // e_loc
+    sub = flat_e % e_loc
+    src = jnp.repeat(xf, top_k, axis=0)
+    buf = buf.at[owner, sub, slot].add(jnp.where(keep[:, None], src, 0))
+    if axes.tp:
+        # exchange: device i sends buf[j] to device j -> receives (tp, e_loc, C, d)
+        buf = lax.all_to_all(buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
+        buf = buf.reshape(tp, e_loc, capacity, d)
+    # expert FFN on owned experts over all received tokens: fold sender dim
+    recv = buf.transpose(1, 0, 2, 3).reshape(e_loc, tp * capacity, d)
+    g = jnp.einsum("ecd,edf->ecf", recv, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", recv, params["w_up"].astype(x.dtype))
+    h = swiglu(g, u)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    out_buf = out_buf.reshape(e_loc, tp, capacity, d).transpose(1, 0, 2, 3)
+    if axes.tp:
+        out_buf = lax.all_to_all(out_buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
+        out_buf = out_buf.reshape(tp, e_loc, capacity, d)
+    picked = out_buf[owner, sub, slot]
+    wk = (w.reshape(-1) * keep).astype(x.dtype)
+    out = jnp.sum((picked * wk[:, None]).reshape(n, top_k, d), axis=1)
+    if axes.tp:
+        # re-assemble the full token set across TP members
+        full = jnp.zeros((n_all, d), x.dtype)
+        full = lax.dynamic_update_slice_in_dim(full, out, axes.tp_index() * n, axis=0)
+        out = axes.psum_tp(full)
+    out = out.reshape(b, t, d)
+    if "shared" in params:
+        out = out + swiglu_mlp(params["shared"], x, axes)
+    return out
+
+
+def moe_block(params, x, axes: Axes, *, n_experts, top_k, capacity_factor=1.25):
+    strategy = pick_strategy(n_experts, axes.tp_size)
+    fn = moe_ep if strategy == "ep" else moe_tp
+    return fn(
+        params, x, axes, n_experts=n_experts, top_k=top_k, capacity_factor=capacity_factor
+    )

@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training, O(1)-state decode.
+
+State space:  h_t = exp(A·dt_t) h_{t-1} + dt_t · (B_t ⊗ x_t),   y_t = C_t · h_t
+with scalar A<0 per head, shared B/C projections (ngroups=1), per-head dt.
+
+Training uses the SSD chunked algorithm: intra-chunk quadratic form +
+inter-chunk state recurrence (lax.scan over chunks) — sub-quadratic in T and
+the reason the zamba2/xlstm configs are the ones allowed to run long_500k.
+
+TP: heads (d_inner) are sharded over the model axis; B/C projections are
+replicated; out-proj is row-parallel (+psum). Decode carries a causal-conv
+tail buffer and the (N×P) state per head.
+
+Simplifications vs the reference CUDA implementation (documented per
+DESIGN.md hardware-adaptation): the depthwise conv is applied to x only (not
+B/C), and gating norm is RMS per head. Neither changes the compute/memory
+shape of the block.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Axes, dense_init, rmsnorm
+
+CONV_K = 4
+
+
+def init_mamba2_params(
+    key, d_model, n_heads_local, head_dim, d_state, dtype=jnp.float32
+):
+    d_inner_loc = n_heads_local * head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_xz": dense_init(ks[0], (d_model, 2 * d_inner_loc), d_model, dtype),
+        "w_bc": dense_init(ks[1], (d_model, 2 * d_state), d_model, dtype),
+        "w_dt": dense_init(ks[2], (d_model, n_heads_local), d_model, dtype),
+        "dt_bias": jnp.full((n_heads_local,), -4.0, dtype),  # softplus -> small dt
+        "conv_w": dense_init(ks[3], (CONV_K, d_inner_loc), CONV_K, dtype),
+        "a_log": jnp.zeros((n_heads_local,), dtype),  # A = -exp(a_log)
+        "d_skip": jnp.ones((n_heads_local,), dtype),
+        "norm_w": jnp.ones((d_inner_loc,), dtype),
+        "w_out": dense_init(ks[4], (d_inner_loc, d_model), d_inner_loc, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, T, C); w: (K, C) depthwise."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunk(h_in, xs):
+    """One chunk. h_in: (B,H,N,P). xs: x (B,Q,H,P), dt (B,Q,H), bc (B,Q,2N),
+    a (H,). Returns (h_out, y (B,Q,H,P))."""
+    x, dt, bc, a = xs
+    n = bc.shape[-1] // 2
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    loga = a[None, None, :] * dt  # (B,Q,H) log decay per step (a<0)
+    s = jnp.cumsum(loga, axis=1)  # (B,Q,H) cumulative log decay
+    # intra-chunk: M[t,τ] = (C_t·B_τ) exp(s_t - s_τ) dt_τ, τ<=t
+    cb = jnp.einsum("btn,bsn->bts", cmat, bmat)  # (B,Q,Q)
+    decay = jnp.exp(
+        jnp.clip(s[:, :, None, :] - s[:, None, :, :], -60.0, 0.0)
+    )  # (B,Q,Q,H)
+    q = x.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    m = cb[..., None] * decay * dt[:, None, :, :]
+    m = jnp.where(causal[None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("btsh,bshp->bthp", m, x)
+    # inter-chunk: y += exp(s_t) C_t h_in
+    y_inter = jnp.exp(s)[..., None] * jnp.einsum(
+        "btn,bhnp->bthp", cmat, h_in
+    )
+    # state update: h_out = exp(s_Q) h_in + Σ_τ exp(s_Q-s_τ) dt_τ B_τ⊗x_τ
+    w_last = jnp.exp(jnp.clip(s[:, -1:, :] - s, -60.0, 0.0)) * dt  # (B,Q,H)
+    dh = jnp.einsum("bqh,bqn,bqhp->bhnp", w_last, bmat, x)
+    h_out = jnp.exp(s[:, -1, :])[:, :, None, None] * h_in + dh
+    return h_out, y_intra + y_inter
+
+
+def mamba2_train(
+    params, x, axes: Axes, *, n_heads_local, head_dim, d_state, chunk=256
+):
+    """x: (B, T, d) replicated. Returns (B, T, d)."""
+    b, t, _ = x.shape
+    h_loc, p_dim, n = n_heads_local, head_dim, d_state
+    xz = jnp.einsum("btd,dk->btk", x, params["w_xz"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = _causal_conv(xin, params["conv_w"].astype(x.dtype))
+    bc = jnp.einsum("btd,dk->btk", x, params["w_bc"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xin.reshape(b, t, h_loc, p_dim).astype(jnp.float32)
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nch = t // q
+    xs = (
+        xh.reshape(b, nch, q, h_loc, p_dim).transpose(1, 0, 2, 3, 4),
+        dt.reshape(b, nch, q, h_loc).transpose(1, 0, 2, 3),
+        bc.reshape(b, nch, q, 2 * n).transpose(1, 0, 2, 3),
+    )
+    h0 = jnp.zeros((b, h_loc, n, p_dim), jnp.float32)
+    step = jax.checkpoint(lambda h, s: _ssd_chunk(h, (s[0], s[1], s[2], a)))
+    _, ys = lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h_loc, p_dim)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, t, h_loc * p_dim).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out)
+
+
+def init_mamba2_cache(b_local, n_heads_local, head_dim, d_state, dtype=jnp.float32):
+    d_inner_loc = n_heads_local * head_dim
+    return {
+        "conv": jnp.zeros((b_local, CONV_K - 1, d_inner_loc), dtype),
+        "h": jnp.zeros((b_local, n_heads_local, d_state, head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, cache, axes: Axes, *, n_heads_local, head_dim, d_state):
+    """One-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    h_loc, p_dim, n = n_heads_local, head_dim, d_state
+    xz = jnp.einsum("btd,dk->btk", x, params["w_xz"].astype(x.dtype))
+    xin, z = jnp.split(xz[:, 0], 2, axis=-1)  # (B, d_inner_loc)
+    # conv over the tail buffer
+    hist = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)  # (B,K,ch)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.sum(hist * w[None, :, :], axis=1)
+    xin_c = jax.nn.silu(conv_out.astype(jnp.float32))
+    new_conv = hist[:, 1:, :]
+    bc = jnp.einsum("bd,dk->bk", x[:, 0], params["w_bc"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    bmat, cmat = bc[:, :n], bc[:, n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", x[:, 0], params["w_dt"].astype(x.dtype)).astype(
+            jnp.float32
+        )
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xin_c.reshape(b, h_loc, p_dim)
+    decay = jnp.exp(a[None, :] * dt)  # (B,H)
+    h_new = decay[:, :, None, None] * cache["h"] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bmat, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, h_new)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, h_loc * p_dim).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out), dict(cache, conv=new_conv, h=h_new)

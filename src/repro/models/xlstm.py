@@ -1,0 +1,204 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel train / recurrent
+decode) and sLSTM (scalar memory, sequential scan).
+
+mLSTM recurrence (per head, stabilizer-free GLA-style form; gates clamped):
+    C_t = f_t C_{t-1} + i_t (k_t ⊗ v_t)        C: (dh, dh)
+    n_t = f_t n_{t-1} + i_t k_t                n: (dh,)
+    y_t = (q_t C_t) / max(|q_t·n_t|, 1)
+
+with f_t = sigmoid(f̃_t) ∈ (0,1), i_t = exp(min(ĩ_t, 0)). Chunked training:
+within-chunk quadratic masked form with cumulative log-f decay, inter-chunk
+state carried by lax.scan — the same structure as Mamba2's SSD, which is why
+both live in the sub-quadratic family that runs long_500k.
+
+sLSTM: per-head scalar-memory cell with exponential gating and a recurrent
+(block-diagonal per head) hidden projection — lax.scan over time.
+
+TP: heads sharded over the model axis; out-proj row-parallel (+psum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Axes, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_params(key, d_model, n_heads_local, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    dk = n_heads_local * head_dim
+    return {
+        "w_q": dense_init(ks[0], (d_model, dk), d_model, dtype),
+        "w_k": dense_init(ks[1], (d_model, dk), d_model, dtype),
+        "w_v": dense_init(ks[2], (d_model, dk), d_model, dtype),
+        "w_if": dense_init(ks[3], (d_model, 2 * n_heads_local), d_model, dtype),
+        "if_bias": jnp.concatenate(
+            [jnp.full((n_heads_local,), -2.0, dtype), jnp.full((n_heads_local,), 3.0, dtype)]
+        ),
+        "norm_w": jnp.ones((dk,), dtype),
+        "w_out": dense_init(ks[4], (dk, d_model), dk, dtype),
+    }
+
+
+def _mlstm_chunk(carry, xs):
+    """carry: C (B,H,dh,dh), n (B,H,dh). xs per chunk: q,k,v (B,Q,H,dh),
+    logf (B,Q,H), logi (B,Q,H)."""
+    C, nvec = carry
+    q, k, v, logf, logi = xs
+    s = jnp.cumsum(logf, axis=1)  # (B,Q,H) cumulative log forget
+    # intra-chunk: A[t,τ] = exp(s_t - s_τ + logi_τ) (q_t·k_τ), τ<=t
+    qk = jnp.einsum("bthd,bshd->bths", q, k)
+    decay = jnp.exp(
+        jnp.clip(s[:, :, None, :] - s[:, None, :, :] + logi[:, None, :, :], -60.0, 30.0)
+    )
+    qlen = q.shape[1]
+    causal = jnp.tril(jnp.ones((qlen, qlen), bool))
+    att = jnp.where(causal[None, :, :, None], qk.transpose(0, 1, 3, 2) * decay, 0.0)
+    y_intra = jnp.einsum("btsh,bshd->bthd", att, v)
+    n_intra = jnp.einsum("btsh,bshd->bthd", att, k)
+    # inter-chunk
+    w_t = jnp.exp(jnp.clip(s, -60.0, 0.0))  # (B,Q,H)
+    y_inter = w_t[..., None] * jnp.einsum("bthd,bhde->bthe", q, C)
+    n_inter = w_t[..., None] * nvec[:, None, :, :]
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_intra + n_inter)), 1.0
+    )
+    y = (y_intra + y_inter) / denom[..., None]
+    # state update
+    w_last = jnp.exp(jnp.clip(s[:, -1:, :] - s + logi, -60.0, 30.0))  # (B,Q,H)
+    dC = jnp.einsum("bqh,bqhd,bqhe->bhde", w_last, k, v)
+    dn = jnp.einsum("bqh,bqhd->bhd", w_last, k)
+    f_all = jnp.exp(jnp.clip(s[:, -1, :], -60.0, 0.0))
+    C_new = f_all[:, :, None, None] * C + dC
+    n_new = f_all[:, :, None] * nvec + dn
+    return (C_new, n_new), y
+
+
+def mlstm_train(params, x, axes: Axes, *, n_heads_local, head_dim, chunk=256):
+    b, t, _ = x.shape
+    h, dh = n_heads_local, head_dim
+    to = lambda w: jnp.einsum("btd,dk->btk", x, w.astype(x.dtype)).astype(jnp.float32)
+    q = to(params["w_q"]).reshape(b, t, h, dh) / jnp.sqrt(float(dh))
+    k = to(params["w_k"]).reshape(b, t, h, dh) / jnp.sqrt(float(dh))
+    v = to(params["w_v"]).reshape(b, t, h, dh)
+    gi = to(params["w_if"]) + params["if_bias"].astype(jnp.float32)
+    logi = jnp.minimum(gi[..., :h], 0.0)
+    logf = jax.nn.log_sigmoid(gi[..., h:])
+    qc = min(chunk, t)
+    assert t % qc == 0
+    nch = t // qc
+    resh = lambda a: a.reshape((b, nch, qc) + a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1))
+    )
+    xs = (resh(q), resh(k), resh(v), resh(logf), resh(logi))
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    step = jax.checkpoint(_mlstm_chunk)
+    _, ys = lax.scan(step, (C0, n0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h * dh).astype(x.dtype)
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out)
+
+
+def init_mlstm_cache(b_local, n_heads_local, head_dim):
+    return {
+        "C": jnp.zeros((b_local, n_heads_local, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((b_local, n_heads_local, head_dim), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, cache, axes: Axes, *, n_heads_local, head_dim):
+    b = x.shape[0]
+    h, dh = n_heads_local, head_dim
+    to = lambda w: jnp.einsum("bd,dk->bk", x[:, 0], w.astype(x.dtype)).astype(jnp.float32)
+    q = to(params["w_q"]).reshape(b, h, dh) / jnp.sqrt(float(dh))
+    k = to(params["w_k"]).reshape(b, h, dh) / jnp.sqrt(float(dh))
+    v = to(params["w_v"]).reshape(b, h, dh)
+    gi = to(params["w_if"]) + params["if_bias"].astype(jnp.float32)
+    i_g = jnp.exp(jnp.minimum(gi[..., :h], 0.0))
+    f_g = jax.nn.sigmoid(gi[..., h:])
+    C = f_g[:, :, None, None] * cache["C"] + i_g[:, :, None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    nv = f_g[:, :, None] * cache["n"] + i_g[:, :, None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nv)), 1.0)
+    y = jnp.einsum("bhd,bhde->bhe", q, C) / denom[..., None]
+    y = y.reshape(b, 1, h * dh).astype(x.dtype)
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out), {"C": C, "n": nv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_params(key, d_model, n_heads_local, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    dk = n_heads_local * head_dim
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * dk), d_model, dtype),
+        "r_h": dense_init(ks[1], (n_heads_local, head_dim, 4 * head_dim), head_dim, dtype),
+        "b": jnp.zeros((4 * dk,), dtype),
+        "norm_w": jnp.ones((dk,), dtype),
+        "w_out": dense_init(ks[2], (dk, d_model), dk, dtype),
+    }
+
+
+def _slstm_cell(params, h_prev, c_prev, zx, n_heads_local, head_dim):
+    """zx: (B, 4*dk) pre-activation from input; h/c: (B, H, dh)."""
+    hh = jnp.einsum("bhd,hde->bhe", h_prev, params["r_h"].astype(h_prev.dtype))
+    z = zx.reshape(zx.shape[0], n_heads_local, 4 * head_dim) + hh
+    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    i_g = jnp.exp(jnp.minimum(zi, 0.0))
+    f_g = jax.nn.sigmoid(zf)
+    c = f_g * c_prev + i_g * jnp.tanh(zg)
+    o = jax.nn.sigmoid(zo)
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def slstm_train(params, x, axes: Axes, *, n_heads_local, head_dim):
+    b, t, _ = x.shape
+    h_loc, dh = n_heads_local, head_dim
+    zx = (
+        jnp.einsum("btd,dk->btk", x, params["w_in"].astype(x.dtype))
+        + params["b"].astype(x.dtype)
+    ).astype(jnp.float32)
+
+    def step(carry, z_t):
+        h, c = carry
+        h2, c2 = _slstm_cell(params, h, c, z_t, h_loc, dh)
+        return (h2, c2), h2
+
+    h0 = jnp.zeros((b, h_loc, dh), jnp.float32)
+    c0 = jnp.zeros((b, h_loc, dh), jnp.float32)
+    _, hs = lax.scan(step, (h0, c0), zx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, t, h_loc * dh).astype(x.dtype)
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out)
+
+
+def init_slstm_cache(b_local, n_heads_local, head_dim):
+    return {
+        "h": jnp.zeros((b_local, n_heads_local, head_dim), jnp.float32),
+        "c": jnp.zeros((b_local, n_heads_local, head_dim), jnp.float32),
+    }
+
+
+def slstm_decode(params, x, cache, axes: Axes, *, n_heads_local, head_dim):
+    b = x.shape[0]
+    zx = (
+        jnp.einsum("bd,dk->bk", x[:, 0], params["w_in"].astype(x.dtype))
+        + params["b"].astype(x.dtype)
+    ).astype(jnp.float32)
+    h, c = _slstm_cell(params, cache["h"], cache["c"], zx, n_heads_local, head_dim)
+    y = h.reshape(b, 1, n_heads_local * head_dim).astype(x.dtype)
+    y = rmsnorm(y, params["norm_w"])
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return axes.psum_tp(out), {"h": h, "c": c}

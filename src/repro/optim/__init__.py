@@ -1,0 +1,4 @@
+from repro.optim.base import OptState, Optimizer, apply_updates
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.schedules import constant, cosine_decay, step_decay, warmup_wrap

@@ -1,0 +1,41 @@
+"""AdamW — the production optimizer for the LM-family configs.
+
+IntSGD composes with any server-side optimizer: the compression happens on
+the raw stochastic gradient (the quantity that crosses the wire); Adam moments
+are computed from the decoded aggregate on every worker identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state["nu"], grads
+        )
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,43 @@
+"""Minimal optimizer interface (optax-style, no external deps).
+
+An Optimizer is a pair of pure functions::
+
+    init(params)                    -> opt_state
+    update(grads, opt_state, params, lr) -> (updates, opt_state)
+
+``updates`` are *added* to params (they already include the -lr factor). The
+learning rate is threaded explicitly because IntSGD's α rule needs η_k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[..., tuple]  # (grads, state, params, lr) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Gradient clipping wrapper (applied to the aggregated gradient)."""
+    import jax.numpy as jnp
+
+    from repro.utils.tree import tree_sq_norm
+
+    def update(grads, state, params, lr):
+        gn = jnp.sqrt(tree_sq_norm(grads))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params, lr)
+
+    return Optimizer(init=opt.init, update=update)

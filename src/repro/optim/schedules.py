@@ -1,0 +1,40 @@
+"""Learning-rate schedules. All return f(step:int32 array) -> lr (f32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def step_decay(lr: float, boundaries, factor: float = 0.1):
+    """Paper's ResNet schedule: decay by `factor` at each boundary epoch/step."""
+    bs = jnp.asarray(boundaries, jnp.int32)
+
+    def f(step):
+        k = jnp.sum((step >= bs).astype(jnp.float32))
+        return lr * (factor**k)
+
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return f
+
+
+def warmup_wrap(sched, warmup_steps: int):
+    """Linear warmup (Goyal et al. 2017 scaling rule, used in the paper)."""
+
+    def f(step):
+        warm = sched(jnp.zeros((), jnp.int32)) * (
+            step.astype(jnp.float32) + 1.0
+        ) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, sched(step))
+
+    return f

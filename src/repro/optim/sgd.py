@@ -1,0 +1,35 @@
+"""SGD with momentum + weight decay, matching torch.optim.SGD semantics
+(the optimizer used in the paper's deep-learning experiments).
+
+Weight decay is added to the (aggregated, decompressed) gradient *before*
+momentum, as in PyTorch. Momentum buffer: m = μ m + g;  update = -lr * m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32), grads, params
+            )
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            eff = jax.tree.map(lambda g, m: g + momentum * m, grads, new_m)
+        else:
+            eff = new_m
+        return jax.tree.map(lambda m: -lr * m, eff), new_m
+
+    return Optimizer(init=init, update=update)

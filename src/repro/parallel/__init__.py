@@ -1,0 +1,1 @@
+from repro.parallel.pp import pipeline_forward

@@ -1,0 +1,73 @@
+"""Pipeline parallelism: GPipe-style microbatched stage execution inside
+shard_map, with lax.ppermute activation transfers between neighbor stages.
+
+Not part of the prescribed production mesh (pod/data/model); provided as the
+scaling escape hatch for depth (e.g. >64-layer models at higher TP would
+exceed HBM per stage) and validated by tests/test_pipeline.py on a forced
+multi-device CPU mesh.
+
+Schedule: classic GPipe fill-drain over n_micro microbatches; each device
+holds L/n_stages layers. The steady-state bubble fraction is
+(n_stages-1)/(n_micro+n_stages-1) — recorded in the §Roofline discussion.
+IntSGD composes unchanged: PP gradients stay stage-local, and the
+data-parallel integer all-reduce happens per stage shard.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_forward(layer_fn, stage_params, x_micro, *, axis: str, n_stages: int):
+    """Run a layer stack split across `n_stages` devices over microbatches.
+
+    layer_fn(params, x) -> x, applied to this stage's parameter slice.
+    stage_params: this device's layer parameters (stacked leading dim
+    L/n_stages — layer_fn is scanned over it).
+    x_micro: (n_micro, mb, ...) microbatched input; only stage 0's value is
+    used, other stages receive activations via ppermute.
+    Returns (n_micro, mb, ...) outputs valid on the LAST stage.
+    """
+    n_micro = x_micro.shape[0]
+    stage = lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def stage_apply(x):
+        def body(h, lp):
+            return layer_fn(lp, h), None
+
+        out, _ = lax.scan(body, x, stage_params)
+        return out
+
+    total = n_micro + n_stages - 1
+
+    def tick(carry, t):
+        outputs, inflight = carry
+        # select this tick's input: stage 0 reads microbatch t, others read
+        # the activation forwarded from the previous stage
+        mb_idx = jnp.clip(t, 0, n_micro - 1)
+        my_in = jnp.where(
+            (stage == 0)[None],
+            x_micro[mb_idx],
+            inflight,
+        )
+        active = (t - stage >= 0) & (t - stage < n_micro)
+        out = stage_apply(my_in)
+        out = jnp.where(active[None], out, jnp.zeros_like(out))
+        # forward to next stage
+        nxt = lax.ppermute(out, axis, perm)
+        # last stage records its finished microbatch
+        done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+        record = (stage == n_stages - 1) & active
+        outputs = outputs.at[done_idx].set(
+            jnp.where(record[None], out, outputs[done_idx])
+        )
+        return (outputs, nxt), None
+
+    outputs0 = jnp.zeros_like(x_micro)
+    inflight0 = jnp.zeros_like(x_micro[0])
+    (outputs, _), _ = lax.scan(tick, (outputs0, inflight0), jnp.arange(total))
+    return outputs

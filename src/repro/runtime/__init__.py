@@ -1,0 +1,2 @@
+from repro.runtime.elastic import ElasticPlan, plan_after_failures
+from repro.runtime.straggler import straggler_tolerant_sum

@@ -1,0 +1,64 @@
+"""Elastic scaling: re-mesh after node failures and keep training.
+
+The property that makes IntSGD *elastic-friendly* (and that a fixed-α scheme
+like Heuristic IntSGD lacks): the scaling rule α_k = √d / √(2 n r_k/η² + ε²)
+takes the worker count n as an INPUT. When a data-parallel replica dies we
+rebuild the mesh with n' = n - failed, recompute α with n', and the
+convergence guarantees keep holding for the new n' (the theory never pins n).
+
+Protocol (driver-level, single coordinator):
+  1. failure detector flags dead hosts (heartbeat timeout in production;
+     injected in tests);
+  2. pick the largest (dp', tp) grid covering the surviving hosts, dropping
+     at most dp_step replicas — TP groups are rebuilt whole: a TP group with
+     any dead member is retired entirely;
+  3. restore the latest checkpoint with the new mesh's shardings
+     (CheckpointStore.restore is mesh-agnostic);
+  4. rebuild the jitted step for the new mesh; rescale per-worker batch or
+     accept the smaller global batch (configurable policy);
+  5. resume from the checkpointed step (the data pipeline is indexed by
+     (step, worker) so no data is skipped or repeated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_dp: int  # surviving data-parallel replicas
+    tp: int  # tensor-parallel degree (unchanged)
+    retired_replicas: tuple  # dp indices dropped
+    global_batch: int
+    note: str
+
+
+def plan_after_failures(
+    *,
+    dp: int,
+    tp: int,
+    failed_devices: Sequence[int],
+    global_batch: int,
+    keep_global_batch: bool = True,
+) -> ElasticPlan:
+    """Devices are numbered dp-major: device = dp_index * tp + tp_index.
+    A dp replica survives iff ALL of its tp members survive."""
+    failed = set(failed_devices)
+    retired = tuple(
+        r for r in range(dp) if any(r * tp + t in failed for t in range(tp))
+    )
+    n_dp = dp - len(retired)
+    if n_dp <= 0:
+        raise RuntimeError("no complete TP group survives; cold restart required")
+    if keep_global_batch:
+        # keep the optimization trajectory: same global batch, bigger
+        # per-worker microbatch (grad-accum if it no longer fits)
+        gb = global_batch
+        note = f"global batch kept at {gb}; per-worker batch x{dp}/{n_dp}"
+    else:
+        gb = global_batch * n_dp // dp
+        note = f"global batch rescaled {global_batch}->{gb}; lr should scale by {n_dp}/{dp}"
+    return ElasticPlan(
+        n_dp=n_dp, tp=tp, retired_replicas=retired, global_batch=gb, note=note
+    )

@@ -1,0 +1,45 @@
+"""Straggler mitigation via partial integer aggregation.
+
+Because IntSGD's wire format is a plain SUM of integers, dropping the k
+slowest workers is algebraically trivial: sum the arrived integers and
+divide by n_live·α instead of n·α. The resulting estimator is still an
+unbiased (sub)gradient of the average over *contributing* workers — under
+iid data this is the same objective; under heterogeneous data it introduces
+the usual sampled-worker variance (same trade-off as client sampling in
+federated learning).
+
+Contrast: PowerSGD's two-phase P/Q all-reduces and QSGD's all-gather cannot
+drop a late worker without restarting the collective — the sum-of-ints
+contract is what buys this.
+
+In production the timeout lives in the collective runtime; here we model it
+as a mask so the policy is testable: `straggler_tolerant_sum` is the exact
+aggregation rule the paper's Algorithm 1 line 12 degrades to under loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.comm import CommCtx
+
+
+def straggler_tolerant_sum(ints_tree, alive: jax.Array, ctx: CommCtx):
+    """ints_tree: this worker's Int(α∘g) payload; alive: bool scalar (did
+    this worker make the deadline). Returns (sum over alive workers,
+    n_live). Late workers contribute zeros — identical on-the-wire math to
+    the switch simply not adding their packets."""
+    a = alive.astype(jnp.int32)
+    masked = jax.tree.map(lambda v: v * a, ints_tree)
+    int_sum = ctx.psum(masked)
+    n_live = lax.psum(a, ctx.axes)
+    return int_sum, n_live
+
+
+def decode_partial(int_sum_tree, alpha, n_live):
+    """ghat = (1/(n_live·α)) Σ_alive Int(α g_i)."""
+    scale = 1.0 / (jnp.maximum(n_live, 1).astype(jnp.float32))
+    return jax.tree.map(
+        lambda s: s.astype(jnp.float32) * scale / alpha, int_sum_tree
+    )

@@ -1,0 +1,89 @@
+"""Batched serving engine: continuous-batching style decode loop.
+
+Single-device reference implementation of the serve path (the full-scale
+sharded decode is what the dry-run lowers via launch/step.py). Features:
+  * slot-based continuous batching: requests claim free slots, finished
+    sequences free them without stalling the batch;
+  * prompt prefill via the decode path (recurrent families) — O(1) state;
+  * greedy sampling through the TP-aware tp_greedy (degenerates to argmax
+    on one device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes
+from repro.models.decode import init_lm_cache, lm_decode_step, tp_greedy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.axes = Axes()
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = init_lm_cache(cfg, 1, 1, slots, max_seq)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pending: List[Request] = []
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, params, cache, tokens, pos):
+        logits, cache = lm_decode_step(params, cache, tokens, pos, self.axes, self.cfg)
+        nxt = tp_greedy(logits, self.axes)
+        return nxt, cache
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[s] = req
+                # prefill by stepping through the prompt (fills KV/state)
+                for i, tok in enumerate(req.prompt):
+                    self.cur_tok = self.cur_tok.at[s].set(tok)
+                    self.pos = self.pos.at[s].set(i)
+                    nxt, self.cache = self._step(
+                        self.params, self.cache, self.cur_tok, self.pos
+                    )
+                req._next = int(nxt[s])
+                self.pos = self.pos.at[s].set(len(req.prompt))
+                self.cur_tok = self.cur_tok.at[s].set(req._next)
+                req.out.append(req._next)
+
+    def run(self, max_iters: int = 1000):
+        it = 0
+        while (self.pending or any(self.active)) and it < max_iters:
+            it += 1
+            self._admit()
+            if not any(self.active):
+                continue
+            nxt, self.cache = self._step(self.params, self.cache, self.cur_tok, self.pos)
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                tok = int(nxt[s])
+                req.out.append(tok)
+                self.pos = self.pos.at[s].add(1)
+                self.cur_tok = self.cur_tok.at[s].set(tok)
+                if len(req.out) >= req.max_new or int(self.pos[s]) >= self.max_seq - 1:
+                    req.done = True
+                    self.active[s] = None
+        return it

@@ -1,0 +1,12 @@
+from repro.utils.tree import (
+    tree_dot,
+    tree_sq_norm,
+    tree_scale,
+    tree_add,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    flatten_to_vector,
+    unflatten_from_vector,
+    tree_cast,
+)

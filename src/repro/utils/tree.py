@@ -1,0 +1,79 @@
+"""Pytree helpers used across the framework.
+
+All helpers are jit-safe (pure jnp) and operate on arbitrary pytrees of
+arrays. The flatten/unflatten pair gives the "one big vector" view of a model
+that the IntSGD theory is written in (x ∈ R^d), while the rest of the
+framework keeps the structured per-layer view.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_dot(a, b):
+    """<a, b> over all leaves, returned as a scalar."""
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return jnp.sum(jnp.stack([jnp.asarray(l, jnp.float32) for l in leaves]))
+
+
+def tree_sq_norm(a):
+    """||a||^2 over all leaves (float32 accumulation)."""
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    )
+    return jnp.sum(jnp.stack(leaves))
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar entries d (static python int)."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(a)))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def flatten_to_vector(tree):
+    """Concatenate all leaves into one 1-D vector. Returns (vec, unflatten_fn)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+
+    def unflatten(v):
+        out, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            out.append(v[off : off + size].reshape(shape))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def unflatten_from_vector(vec, like):
+    """Reshape a flat vector back into the structure of `like`."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        size = int(np.prod(l.shape))
+        out.append(vec[off : off + size].reshape(l.shape).astype(l.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests and benches must see exactly ONE device; only dryrun.py forces
+# 512 placeholder devices (in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

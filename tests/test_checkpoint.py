@@ -1,0 +1,75 @@
+"""Checkpoint store: atomicity, keep-k GC, async writes, restore paths."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+
+
+def _tree(key, scale=1.0):
+    return {
+        "params": {"w": jax.random.normal(key, (8, 4)) * scale, "b": jnp.ones((4,))},
+        "step_scalar": jnp.float32(scale),
+    }
+
+
+def test_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path), async_writes=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    store.save(5, tree, extra={"loss": 1.25})
+    got, extra, step = store.restore(tree)
+    assert step == 5 and extra["loss"] == 1.25
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_k_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep_last=2, async_writes=False)
+    for s in [1, 2, 3, 4]:
+        store.save(s, _tree(jax.random.PRNGKey(s), scale=s))
+    assert store.all_steps() == [3, 4]
+    got, _, step = store.restore(_tree(jax.random.PRNGKey(0)))
+    assert step == 4
+    assert float(got["step_scalar"]) == 4.0
+
+
+def test_async_writer(tmp_path):
+    store = CheckpointStore(str(tmp_path), async_writes=True)
+    for s in range(3):
+        store.save(s, _tree(jax.random.PRNGKey(s), scale=s))
+    store.wait()
+    assert store.latest_step() == 2
+
+
+def test_no_tmp_dirs_visible_after_publish(tmp_path):
+    store = CheckpointStore(str(tmp_path), async_writes=False)
+    store.save(1, _tree(jax.random.PRNGKey(0)))
+    names = os.listdir(tmp_path)
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    store = CheckpointStore(str(tmp_path), async_writes=False)
+    store.save(1, _tree(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError):
+        store.restore({"different": jnp.zeros((3,))})
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    store = CheckpointStore(str(tmp_path), async_writes=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    store.save(1, tree)
+    bad = jax.tree.map(lambda x: jnp.zeros((7,) + x.shape, x.dtype), tree)
+    with pytest.raises(ValueError):
+        store.restore(bad)
+
+
+def test_restore_latest_of_many(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep_last=10, async_writes=False)
+    for s in [10, 20, 30]:
+        store.save(s, _tree(jax.random.PRNGKey(s), scale=float(s)))
+    got, _, step = store.restore(_tree(jax.random.PRNGKey(0)), step=20)
+    assert step == 20 and float(got["step_scalar"]) == 20.0

@@ -1,0 +1,152 @@
+"""Paper-claim reproduction at test scale: IntSGD converges like SGD
+(Theorems 1-3 / Figure 1), Heuristic IntSGD does not, IntDIANA fixes the
+heterogeneous max-int blowup (Appendix A.2 / Figure 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_compressor
+from repro.core.simulate import SimTrainer
+from repro.data.logreg import make_logreg
+from repro.optim import sgd
+from repro.optim.schedules import constant
+
+N = 8
+
+
+def _quadratic():
+    key = jax.random.PRNGKey(0)
+    bs = jax.random.normal(key, (N, 20))
+
+    def loss(params, batch):
+        return 0.5 * jnp.sum((params["x"] - batch) ** 2)
+
+    return loss, bs, {"x": jnp.zeros(20)}, bs.mean(0)
+
+
+def _final_err(comp_name, steps=400, lr=0.2, momentum=0.0):
+    loss, bs, x0, opt_pt = _quadratic()
+    tr = SimTrainer(loss, N, make_compressor(comp_name), sgd(momentum=momentum), constant(lr))
+    st = tr.init(x0)
+    m = None
+    for _ in range(steps):
+        st, m = tr.step(st, bs)
+    return float(jnp.linalg.norm(st.params["x"] - opt_pt)), m
+
+
+def test_intsgd_matches_sgd_quadratic():
+    """Thm 2 regime (smooth convex, deterministic grads): IntSGD reaches the
+    optimum like exact SGD."""
+    err_sgd, _ = _final_err("none")
+    err_int, _ = _final_err("intsgd")
+    err_det, _ = _final_err("intsgd_determ")
+    err_blk, _ = _final_err("intsgd_block")
+    assert err_sgd < 1e-5
+    assert err_int < 1e-5
+    assert err_det < 1e-5
+    assert err_blk < 1e-5
+
+
+def test_heuristic_intsgd_stalls():
+    """Fig 1 phenomenon: the Sapio et al. fixed-α rule fails to reach the
+    optimum that adaptive IntSGD attains."""
+    err_int, _ = _final_err("intsgd")
+    err_heur, _ = _final_err("heuristic_intsgd")
+    assert err_heur > 100 * max(err_int, 1e-12)
+
+
+def test_intsgd_with_momentum_matches_sgd_logreg():
+    """Deep-learning-style setup on convex logreg (heterogeneous data):
+    terminal losses match within noise (paper Table 2 accuracy parity)."""
+    prob = make_logreg(jax.random.PRNGKey(1), n_workers=N, m=64, d=50)
+    data = prob.worker_data()
+    x0 = {"x": jnp.zeros(50)}
+
+    def run(name):
+        tr = SimTrainer(
+            prob.worker_loss, N, make_compressor(name), sgd(momentum=0.9), constant(0.3)
+        )
+        st = tr.init(x0)
+        for _ in range(250):
+            st, _ = tr.step(st, data)
+        return float(prob.full_loss(st.params["x"]))
+
+    l_sgd = run("none")
+    l_int = run("intsgd")
+    # constant-lr noise floor allows a small gap; the paper's parity is at
+    # tuned/decayed lr (Tables 2-3); 10% terminal-loss band is the analogue
+    assert abs(l_int - l_sgd) / l_sgd < 0.10, (l_int, l_sgd)
+
+
+def test_linear_speedup_variance_reduction():
+    """Cor. 2 linear speedup ingredient: the quantization-error variance of
+    the aggregate shrinks like 1/n (independent per-worker rounding)."""
+    from repro.core.comm import CommCtx
+    from repro.core.compressor import IntSGD
+    from repro.core.scaling import AlphaState
+
+    g = jnp.ones((64,)) * 0.37
+    comp = IntSGD()
+
+    def var_for(n):
+        ctx = CommCtx(axes=("w",), axis_sizes=(n,))
+        state = AlphaState(
+            r=jnp.ones((n,)) * 1e-4, step=jnp.ones((n,), jnp.int32)
+        )
+        grads = jnp.broadcast_to(g, (n, 64))
+
+        def worker(s, gg, key):
+            ghat, _, _ = comp.aggregate(
+                s, {"w": gg}, key=key, eta=jnp.float32(0.1), ctx=ctx
+            )
+            return ghat["w"]
+
+        errs = []
+        for t in range(50):
+            out = jax.vmap(worker, in_axes=(0, 0, None), axis_name="w")(
+                state, grads, jax.random.PRNGKey(t)
+            )
+            errs.append(np.asarray(out[0] - g))
+        return np.var(np.stack(errs))
+
+    v2, v16 = var_for(2), var_for(16)
+    # α also scales with n (α ∝ 1/√n -> per-worker var ∝ n), so the net
+    # aggregate variance is ~constant in n per theory; check it does NOT blow
+    # up and stays within 4x across an 8x worker change
+    assert v16 < 4 * v2 + 1e-12
+
+
+def test_intdiana_bounds_max_int_heterogeneous():
+    """Fig 6 / Appendix A.2: with heterogeneous FULL gradients (IntGD), the
+    per-worker payload |Int(α g_i)|∞ blows up near the optimum because
+    ||∇f_i(x*)|| ≠ 0 while ||Δx|| → 0. IntDIANA compresses g_i - h_i with
+    h_i → ∇f_i(x*), keeping payload integers tiny (paper: <3 bits)."""
+    from repro.core.compressor import IntSGD
+    from repro.core.scaling import AlphaLastStep
+
+    key = jax.random.PRNGKey(0)
+    bs = jax.random.normal(key, (N, 30)) * 3.0  # heterogeneous optima
+
+    def loss(p, b):
+        return 0.5 * jnp.sum((p["x"] - b) ** 2)
+
+    x0 = {"x": jnp.zeros(30)}
+
+    def trace(comp, steps=120, lr=0.5):
+        tr = SimTrainer(loss, N, comp, sgd(), constant(lr))
+        st = tr.init(x0)
+        out = []
+        for _ in range(steps):
+            st, m = tr.step(st, bs)
+            out.append(0 if m is None else float(m.max_local_int))
+        err = float(jnp.linalg.norm(st.params["x"] - bs.mean(0)))
+        return np.asarray(out), err
+
+    ints_gd, err_gd = trace(IntSGD(alpha_rule=AlphaLastStep()))
+    ints_diana, err_diana = trace(make_compressor("intdiana"))
+    # both converge to the optimum
+    assert err_gd < 1e-4 and err_diana < 1e-4
+    # IntGD payload explodes (>1e4); IntDIANA stays within a few bits
+    assert ints_gd[-1] > 1e4, ints_gd[-1]
+    assert ints_diana.max() < 64, ints_diana.max()

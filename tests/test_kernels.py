@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exact where
+the math is exact, allclose where FMA reassociation applies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(7,), (128,), (1000,), (8, 128), (300, 700), (3, 5, 7), (2, 3, 4, 5)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", [8, 32])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_int_compress_matches_oracle(shape, bits, stochastic):
+    key = jax.random.PRNGKey(hash((shape, bits)) % 2**31)
+    x = jax.random.normal(key, shape, jnp.float32) * 5.0
+    alpha = jnp.float32(23.7)
+    seed = ops.seed_from_key(key)
+    got = ops.int_compress(
+        x, alpha, key, n_workers=4, bits=bits, stochastic=stochastic
+    )
+    want = ref.int_compress_ref(
+        x, alpha, seed, n_workers=4, bits=bits, stochastic=stochastic
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int_compress_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (333,), jnp.float32).astype(dtype)
+    got = ops.int_compress(x, jnp.float32(100.0), key, n_workers=2)
+    want = ref.int_compress_ref(
+        x, jnp.float32(100.0), ops.seed_from_key(key), n_workers=2
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_compress_unbiased_statistics():
+    """Kernel's stochastic rounding is unbiased: mean(Int(αx)/α) ≈ mean(x)."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (200_000,))
+    alpha = jnp.float32(3.0)
+    ints = ops.int_compress(x, alpha, key, n_workers=1)
+    err = float(jnp.mean(ints.astype(jnp.float32) / alpha - x))
+    assert abs(err) < 1e-3
+
+
+@pytest.mark.parametrize("shape", [(64,), (513, 300), (4, 4, 4)])
+def test_fused_update_matches_oracle(shape):
+    key = jax.random.PRNGKey(1)
+    ints = jax.random.randint(key, shape, -1000, 1000)
+    p = jax.random.normal(key, shape)
+    m = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    got_p, got_m = ops.fused_update(ints, p, m, 1e-3, 0.1, 0.9, 1e-4)
+    want_p, want_m = ref.fused_update_ref(
+        ints, p, m,
+        inv_nalpha=jnp.float32(1e-3), lr=jnp.float32(0.1),
+        mu=jnp.float32(0.9), wd=jnp.float32(1e-4),
+    )
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_update_equals_sgd_semantics():
+    """Fused kernel == decode + torch-SGD reference sequence."""
+    key = jax.random.PRNGKey(2)
+    ints = jax.random.randint(key, (1000,), -500, 500)
+    p = jax.random.normal(key, (1000,))
+    m = jnp.zeros((1000,))
+    inv_nalpha, lr, mu, wd = 2e-3, 0.05, 0.9, 1e-4
+    got_p, got_m = ops.fused_update(ints, p, m, inv_nalpha, lr, mu, wd)
+    g = ints * inv_nalpha + wd * p
+    m2 = mu * m + g
+    p2 = p - lr * m2
+    np.testing.assert_allclose(got_p, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, m2, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 5000), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_block_norms_property(size, nblocks):
+    """Sum of block norms == total ||x||² for any size/block split."""
+    x = jax.random.normal(jax.random.PRNGKey(size), (size,))
+    bn = ops.block_sq_norms(x, nblocks)
+    assert bn.shape == (nblocks,)
+    np.testing.assert_allclose(
+        float(jnp.sum(bn)), float(jnp.sum(x * x)), rtol=1e-4
+    )
+
+
+def test_sq_norm_kernel():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048, 130))
+    np.testing.assert_allclose(
+        float(ops.sq_norm(x)), float(jnp.sum(x * x)), rtol=1e-5
+    )

@@ -1,0 +1,84 @@
+"""Chunked-parallel training paths must EXACTLY match step-by-step decode —
+the invariant that guarantees serve-time outputs agree with train-time
+likelihoods for the recurrent families (Mamba2 SSD, mLSTM GLA-form, sLSTM),
+and that the GQA KV-cache decode agrees with full attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import ssm, xlstm
+from repro.models.common import Axes, plan_heads
+
+AXES = Axes()
+B, T, D = 2, 32, 24
+H, P, N = 2, 8, 16
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (B, T, D)) * 0.5
+
+
+def _decode_all(step_fn, cache):
+    ys = []
+    for t in range(T):
+        y_t, cache = step_fn(t, cache)
+        ys.append(y_t)
+    return jnp.concatenate(ys, axis=1)
+
+
+def test_mamba2_train_equals_decode(x):
+    p = ssm.init_mamba2_params(jax.random.PRNGKey(0), D, H, P, N)
+    kw = dict(n_heads_local=H, head_dim=P, d_state=N)
+    y_train = ssm.mamba2_train(p, x, AXES, chunk=8, **kw)
+    y_dec = _decode_all(
+        lambda t, c: ssm.mamba2_decode(p, x[:, t : t + 1], c, AXES, **kw),
+        ssm.init_mamba2_cache(B, H, P, N),
+    )
+    np.testing.assert_allclose(y_train, y_dec, atol=5e-5, rtol=1e-4)
+
+
+def test_mlstm_train_equals_decode(x):
+    p = xlstm.init_mlstm_params(jax.random.PRNGKey(0), D, H, P)
+    kw = dict(n_heads_local=H, head_dim=P)
+    y_train = xlstm.mlstm_train(p, x, AXES, chunk=8, **kw)
+    y_dec = _decode_all(
+        lambda t, c: xlstm.mlstm_decode(p, x[:, t : t + 1], c, AXES, **kw),
+        xlstm.init_mlstm_cache(B, H, P),
+    )
+    np.testing.assert_allclose(y_train, y_dec, atol=5e-5, rtol=1e-4)
+
+
+def test_slstm_train_equals_decode(x):
+    p = xlstm.init_slstm_params(jax.random.PRNGKey(0), D, H, P)
+    kw = dict(n_heads_local=H, head_dim=P)
+    y_train = xlstm.slstm_train(p, x, AXES, **kw)
+    y_dec = _decode_all(
+        lambda t, c: xlstm.slstm_decode(p, x[:, t : t + 1], c, AXES, **kw),
+        xlstm.init_slstm_cache(B, H, P),
+    )
+    np.testing.assert_allclose(y_train, y_dec, atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_attention_train_equals_kv_decode(x, window):
+    """attention_train's chunked online softmax at each position must match
+    decoding that position against a KV cache filled with the prefix."""
+    layout = plan_heads(4, 2, 8, 1)
+    p = attn.init_attn_params(jax.random.PRNGKey(0), D, layout)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    y_train = attn.attention_train(p, x, pos, AXES, layout, window=window, chunk=8)
+    cache = attn.init_cache(B, T, layout, jnp.float32)
+    ys = []
+    for t in range(T):
+        y_t, cache = attn.attention_decode(
+            p, x[:, t : t + 1], jnp.full((B,), t, jnp.int32), cache, AXES,
+            layout, window=window,
+        )
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_train), np.asarray(y_dec), atol=1e-4, rtol=1e-3
+    )

@@ -1,0 +1,82 @@
+"""Property tests for the Int operator (paper §2, Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rounding
+
+finite_floats = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64), st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_int_rounding_bounded_error(vals, seed):
+    """|Int(t) - t| < 1 always (the rounding moves to an adjacent integer)."""
+    x = jnp.asarray(vals, jnp.float32)
+    r = rounding.stochastic_round(x, jax.random.PRNGKey(seed))
+    assert np.all(np.abs(np.asarray(r) - np.asarray(x)) < 1.0 + 1e-5)
+    # result is integral
+    assert np.all(np.asarray(r) == np.round(np.asarray(r)))
+
+
+@given(finite_floats)
+@settings(max_examples=30, deadline=None)
+def test_int_rounding_unbiased(t):
+    """E[Int(t)] = t (Lemma 1, eq. 3) — Monte Carlo with tight CI."""
+    n = 4000
+    x = jnp.full((n,), t, jnp.float32)
+    keys = jax.random.PRNGKey(0)
+    r = rounding.stochastic_round(x, keys)
+    frac = float(t - np.floor(t))
+    se = np.sqrt(max(frac * (1 - frac), 1e-12) / n)
+    assert abs(float(jnp.mean(r)) - t) <= max(6 * se, 1e-3 * max(abs(t), 1.0))
+
+
+def test_int_rounding_variance_bound():
+    """E[(Int(t)-t)^2] <= 1/4 (Lemma 1, eq. 4), worst case at frac=0.5."""
+    key = jax.random.PRNGKey(0)
+    for frac in [0.1, 0.25, 0.5, 0.75, 0.9]:
+        x = jnp.full((20000,), 3.0 + frac, jnp.float32)
+        r = rounding.stochastic_round(x, key)
+        var = float(jnp.mean(jnp.square(r - x)))
+        assert var <= 0.25 + 0.02, (frac, var)
+        # exact Bernoulli variance: frac*(1-frac)
+        assert abs(var - frac * (1 - frac)) < 0.02
+
+
+def test_integer_inputs_fixed_points():
+    """Integers are fixed points of Int (prob of +1 is exactly 0)."""
+    x = jnp.arange(-50, 50, dtype=jnp.float32)
+    r = rounding.stochastic_round(x, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(x))
+
+
+def test_encode_decode_roundtrip_precision():
+    """(1/α)Int(αx) -> x as α -> inf (quantization error ~ 1/α)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1000,))
+    for alpha, tol in [(10.0, 0.1), (1000.0, 1e-3), (1e6, 1e-6)]:
+        ints = rounding.encode(x, jnp.float32(alpha), key, n_workers=1, bits=32)
+        back = rounding.decode(ints, jnp.float32(alpha), n_workers=1)
+        assert float(jnp.max(jnp.abs(back - x))) <= tol
+
+
+def test_clip_for_wire_sum_fits():
+    """n-worker sum of clipped ints must fit the wire dtype (paper §5.1)."""
+    for bits, n in [(8, 16), (16, 64), (32, 1000)]:
+        lim = rounding._INT_RANGE[bits] // n
+        ints = jnp.full((100,), 10 * lim, jnp.float32)
+        clipped = rounding.clip_for_wire(ints, n_workers=n, bits=bits)
+        assert float(jnp.max(jnp.abs(clipped))) * n <= rounding._INT_RANGE[bits]
+
+
+def test_deterministic_round_matches_torch_semantics():
+    x = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5, 0.49, 0.51])
+    r = rounding.deterministic_round(x)
+    np.testing.assert_array_equal(
+        np.asarray(r), np.asarray([0.0, 2.0, 2.0, -0.0, -2.0, 0.0, 1.0])
+    )

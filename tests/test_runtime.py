@@ -1,0 +1,87 @@
+"""Fault tolerance: elastic re-mesh planning + straggler-tolerant sums +
+end-to-end failure/recovery with checkpoint restore and worker-count change
+(IntSGD's α adapts because n is an input)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_compressor
+from repro.core.comm import CommCtx
+from repro.core.simulate import SimTrainer
+from repro.checkpoint import CheckpointStore
+from repro.data.logreg import make_logreg
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.runtime import plan_after_failures, straggler_tolerant_sum
+from repro.runtime.straggler import decode_partial
+
+
+def test_elastic_plan_retires_whole_tp_groups():
+    plan = plan_after_failures(dp=16, tp=16, failed_devices=[5, 250], global_batch=256)
+    # device 5 -> replica 0; device 250 -> replica 15
+    assert plan.retired_replicas == (0, 15)
+    assert plan.n_dp == 14
+    assert plan.global_batch == 256  # keep_global_batch default
+
+
+def test_elastic_plan_rescaled_batch():
+    plan = plan_after_failures(
+        dp=8, tp=2, failed_devices=[3], global_batch=64, keep_global_batch=False
+    )
+    assert plan.n_dp == 7
+    assert plan.global_batch == 56
+
+
+def test_elastic_plan_total_failure():
+    with pytest.raises(RuntimeError):
+        plan_after_failures(dp=2, tp=2, failed_devices=[0, 3], global_batch=8)
+
+
+def test_straggler_tolerant_sum():
+    """Dropping a straggler = sum over alive + divide by n_live; exact."""
+    n = 4
+    ctx = CommCtx(axes=("w",), axis_sizes=(n,))
+    ints = jnp.arange(n * 6, dtype=jnp.int32).reshape(n, 6)
+    alive = jnp.array([True, True, False, True])
+
+    def worker(x, a):
+        s, n_live = straggler_tolerant_sum({"g": x}, a, ctx)
+        return s["g"], n_live
+
+    s, n_live = jax.vmap(worker, axis_name="w")(ints, alive)
+    expect = np.asarray(ints)[np.asarray(alive)].sum(0)
+    np.testing.assert_array_equal(np.asarray(s[0]), expect)
+    assert int(n_live[0]) == 3
+    ghat = decode_partial({"g": s[0]}, jnp.float32(2.0), n_live[0])
+    np.testing.assert_allclose(np.asarray(ghat["g"]), expect / (3 * 2.0), rtol=1e-6)
+
+
+def test_failure_recovery_end_to_end(tmp_path):
+    """Train with n=8, checkpoint, 'lose' 2 workers, resume with n=6 —
+    training continues to converge (α recomputed with the new n)."""
+    prob = make_logreg(jax.random.PRNGKey(0), n_workers=8, m=32, d=20)
+    data = prob.worker_data()
+    x0 = {"x": jnp.zeros(20)}
+    store = CheckpointStore(str(tmp_path), async_writes=False)
+
+    tr8 = SimTrainer(prob.worker_loss, 8, make_compressor("intsgd"), sgd(), constant(0.5))
+    st = tr8.init(x0)
+    for i in range(40):
+        st, _ = tr8.step(st, data)
+    store.save(40, {"params": st.params})
+    loss_at_ckpt = float(prob.full_loss(st.params["x"]))
+
+    # failure: replicas 6,7 die -> resume with 6 workers and their data
+    got, _, step = store.restore({"params": x0})
+    tr6 = SimTrainer(prob.worker_loss, 6, make_compressor("intsgd"), sgd(), constant(0.5))
+    st6 = tr6.init(got["params"])
+    data6 = jax.tree.map(lambda x: x[:6], data)
+    for i in range(60):
+        st6, _ = tr6.step(st6, data6)
+    # objective over the surviving shards keeps decreasing
+    surv = jax.tree.map(lambda x: x[:6], data)
+    surv_loss = lambda x: float(
+        jnp.mean(jax.nn.softplus(-(jnp.einsum("wmd,d->wm", surv["A"], x) * surv["b"])))
+    )
+    assert surv_loss(st6.params["x"]) < surv_loss(got["params"]["x"]) + 1e-6

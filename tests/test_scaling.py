@@ -1,0 +1,91 @@
+"""Scaling rules: Assumption 1 identities (Props 2-4) + §4.2 bit bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scaling import (
+    AlphaBlockwise,
+    AlphaHeuristic,
+    AlphaLastStep,
+    AlphaMovingAvg,
+)
+from repro.core.stats import DxStats, local_dx_stats
+
+
+def _dx(key, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_prop2_assumption1_identity():
+    """Prop 2: d·η²/α_k² == η²ε² + 2n·r_k with r_k the moving average."""
+    rule = AlphaMovingAvg(beta=0.9, eps=1e-4)
+    key = jax.random.PRNGKey(0)
+    tree = _dx(key, [(32, 16), (100,)])
+    d = 32 * 16 + 100
+    n, eta = 8, 0.05
+    state = rule.init(tree)
+    r_manual = 0.0
+    for k in range(5):
+        dx = _dx(jax.random.fold_in(key, k), [(32, 16), (100,)])
+        stats = local_dx_stats(dx)
+        state = rule.update(state, stats)
+        r_manual = 0.9 * r_manual + 0.1 * float(stats.sq)
+        alpha = float(rule.alpha(state, jnp.float32(eta), n, d))
+        lhs = d * eta**2 / alpha**2
+        rhs = eta**2 * rule.eps**2 + 2 * n * r_manual
+        assert abs(lhs - rhs) / rhs < 1e-4
+
+
+def test_prop3_last_step_identity():
+    """Prop 3: α = η√d/(√(2n)||Δx||)  =>  d·η²/α² == 2n||Δx||²."""
+    rule = AlphaLastStep()
+    key = jax.random.PRNGKey(1)
+    dx = _dx(key, [(64,)])
+    d, n, eta = 64, 4, 0.1
+    state = rule.update(rule.init(dx), local_dx_stats(dx))
+    alpha = float(rule.alpha(state, jnp.float32(eta), n, d))
+    sq = float(local_dx_stats(dx).sq)
+    assert abs(d * eta**2 / alpha**2 - 2 * n * sq) / (2 * n * sq) < 1e-4
+
+
+def test_prop4_blockwise_identity():
+    """Prop 4: Σ_l d_l η²/α_l² == 2n Σ_l r_l (+ ε-term)."""
+    rule = AlphaBlockwise(beta=0.0, eps=0.0)
+    key = jax.random.PRNGKey(2)
+    dx = _dx(key, [(32, 16), (100,)])
+    dims = {"p0": 512.0, "p1": 100.0}
+    d = 612.0
+    n, eta = 8, 0.05
+    state = rule.update(rule.init(dx), local_dx_stats(dx))
+    alphas = rule.alpha_tree(state, jnp.float32(eta), n, dims, d)
+    lhs = sum(
+        float(dims[k]) * eta**2 / float(alphas[k]) ** 2 for k in dims
+    )
+    rhs = 2 * n * float(local_dx_stats(dx).sq)
+    assert abs(lhs - rhs) / rhs < 1e-4
+
+
+def test_section42_bits_bound():
+    """§4.2: with α = √d/(√(2n)||g||), ||α g||∞ <= √d/√(2n) so the wire
+    needs at most 1 + log2(√d/√(2n)) bits per coordinate."""
+    key = jax.random.PRNGKey(3)
+    d, n = 10000, 100
+    g = jax.random.normal(key, (d,))
+    alpha = jnp.sqrt(d / (2.0 * n)) / jnp.linalg.norm(g)
+    maxint = float(jnp.max(jnp.abs(alpha * g)))
+    bound = np.sqrt(d / (2.0 * n))
+    assert maxint <= bound + 1e-5
+    bits = 1 + np.log2(max(maxint, 1))
+    assert bits <= 1 + np.log2(bound)
+
+
+def test_heuristic_alpha_no_overflow():
+    """Sapio rule keeps every scaled coordinate within the int range."""
+    rule = AlphaHeuristic(bits=8)
+    key = jax.random.PRNGKey(4)
+    g = jax.random.normal(key, (1000,)) * 37.0
+    absmax = jnp.max(jnp.abs(g))
+    alpha = rule.alpha_from_absmax(absmax, n_workers=16)
+    assert float(jnp.max(jnp.abs(alpha * g))) * 16 <= 2**7 - 1 + 1e-3
