@@ -5,11 +5,13 @@ code path then runs:
 
   * inside ``shard_map`` over the production mesh (axes = ("pod","data") or
     ("data",)) — collectives lower to real ICI all-reduce / all-gather;
-  * inside ``jax.vmap(..., axis_name="workers")`` — the n-worker simulation
+  * inside ``vmap(axis_name="workers")`` — the n-worker simulation
     used by CPU convergence tests and the paper-reproduction benchmarks.
 
 This is what lets us validate the *distributed algorithm* bit-exactly on a
-single CPU device and then lower the identical code for 512 chips.
+single CPU device and then lower the identical code for 512 chips. All raw
+collectives come from :mod:`repro.parallel.collectives`, the version-portable
+layer both execution modes share.
 """
 from __future__ import annotations
 
@@ -17,7 +19,8 @@ import dataclasses
 from typing import Tuple
 
 import jax
-from jax import lax
+
+from repro.parallel import collectives as coll
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,37 +37,29 @@ class CommCtx:
         return out
 
     def psum(self, x):
-        return jax.tree.map(lambda v: lax.psum(v, self.axes), x)
+        return coll.psum_tree(x, self.axes)
 
     def pmax(self, x):
-        return jax.tree.map(lambda v: lax.pmax(v, self.axes), x)
+        return coll.pmax_tree(x, self.axes)
 
     def pmax_global(self, x):
         """Max over workers AND TP shards (profiling reductions that must see
         the entire model, e.g. Heuristic IntSGD's max_exp)."""
         axes = self.axes + ((self.model_axis,) if self.model_axis else ())
-        return jax.tree.map(lambda v: lax.pmax(v, axes), x)
+        return coll.pmax_tree(x, axes)
 
     def pmean(self, x):
-        return jax.tree.map(lambda v: lax.psum(v, self.axes) / self.n, x)
+        return coll.pmean_tree(x, self.axes, self.n)
 
     def all_gather(self, x):
         """Gather with a flat leading worker axis of size n."""
-
-        def g(v):
-            out = v
-            for ax in reversed(self.axes):
-                out = lax.all_gather(out, ax)
-            return out.reshape((self.n,) + v.shape)
-
-        return jax.tree.map(g, x)
+        return jax.tree.map(
+            lambda v: coll.all_gather_flat(v, self.axes, self.n), x
+        )
 
     def worker_index(self):
         """Linearized data-parallel worker id in [0, n)."""
-        idx = 0
-        for ax, size in zip(self.axes, self.axis_sizes):
-            idx = idx * size + lax.axis_index(ax)
-        return idx
+        return coll.linear_axis_index(self.axes, self.axis_sizes)
 
 
 def fold_worker_key(key: jax.Array, ctx: CommCtx) -> jax.Array:

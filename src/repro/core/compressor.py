@@ -150,7 +150,12 @@ class IntSGD(Compressor):
             a = jax.tree.map(lambda _: a_scalar, grads)
         return a
 
-    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+    def aggregate_wire(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        """Wire-level aggregation: returns the summed INTEGER payload and the
+        α tree *without* decoding. This is the entry point the fused
+        decode+update kernel routing (launch/step.py) builds on — the decode
+        1/(nα) is folded into the Pallas optimizer kernel instead of
+        materializing ĝ. ``aggregate`` is the decode-here wrapper."""
         n = ctx.n
         alphas = self._alphas(state, grads, eta, n, dims)
         wkey = fold_worker_key(key, ctx)
@@ -182,9 +187,6 @@ class IntSGD(Compressor):
         # THE wire: integer all-reduce (psum of int32). On TPU this is the ICI
         # collective carrying only integers — the paper's INA/all-reduce analog.
         int_sum = ctx.psum(ints)
-        ghat = jax.tree.map(
-            lambda s, a: rounding.decode(s, a, n_workers=n), int_sum, alphas
-        )
         max_int = jnp.max(
             jnp.stack(
                 [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
@@ -192,7 +194,16 @@ class IntSGD(Compressor):
         )
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         payload = (self.bits / 8.0) * tree_size(grads)
-        return ghat, state, Metrics(max_int, bits, payload, max_local)
+        return int_sum, alphas, state, Metrics(max_int, bits, payload, max_local)
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        int_sum, alphas, state, metrics = self.aggregate_wire(
+            state, grads, key=key, eta=eta, ctx=ctx, dims=dims
+        )
+        ghat = jax.tree.map(
+            lambda s, a: rounding.decode(s, a, n_workers=ctx.n), int_sum, alphas
+        )
+        return ghat, state, metrics
 
 
 # --------------------------------------------------------------------------

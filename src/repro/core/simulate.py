@@ -19,11 +19,12 @@ import jax.numpy as jnp
 
 from repro.core.comm import CommCtx
 from repro.core.compressor import Compressor, aggregate_exact
-from repro.core.stats import local_dx_stats
+from repro.core.stats import local_dx_stats, scale_dx_stats
 from repro.optim.base import Optimizer, apply_updates
+from repro.parallel import collectives as coll
 from repro.utils.tree import tree_sub
 
-AXIS = "workers"
+AXIS = coll.WORKER_AXIS
 
 
 @jax.tree_util.register_dataclass
@@ -87,10 +88,9 @@ class SimTrainer:
     def _step(self, state: SimState, batches, *, exact: bool):
         key, sub = jax.random.split(state.key)
         eta = self.lr(state.step)
-        round_fn = jax.vmap(
+        round_fn = coll.vmap_workers(
             partial(self._worker_round, exact=exact),
             in_axes=(None, 0, 0, None, None),
-            axis_name=AXIS,
         )
         ghat_all, new_cs, metrics, _ = round_fn(
             state.params, state.comp_state, batches, sub, eta
@@ -99,8 +99,10 @@ class SimTrainer:
         ghat = jax.tree.map(lambda x: x[0], ghat_all)
         updates, opt_state = self.opt.update(ghat, state.opt_state, state.params, eta)
         new_params = apply_updates(state.params, updates)
-        # Δx^{k+1} = x^{k+1} - x^k feeds r_{k+1} (moving average, Alg. 1 line 6)
-        dx_stats = local_dx_stats(updates)
+        # Δx^{k+1} = x^{k+1} - x^k feeds r_{k+1} (moving average, Alg. 1 line 6),
+        # rescaled to gradient-equivalent units (§4.1: momentum-inclusive
+        # update, dx_scale = 1-μ corrects the 1/(1-μ) amplification)
+        dx_stats = scale_dx_stats(local_dx_stats(updates), self.opt.dx_scale)
         if jax.tree.leaves(new_cs):
             new_cs = jax.vmap(self.comp.observe_update, in_axes=(0, None))(
                 new_cs, dx_stats

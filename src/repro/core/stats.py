@@ -48,6 +48,19 @@ def local_tree_dims(tree) -> TreeDims:
     return TreeDims(d=tree_size(tree), leaf_dims=leaf_dims)
 
 
+def scale_dx_stats(stats: DxStats, scale: float) -> DxStats:
+    """Rescale ||Δx||² stats by scale² — converts the applied (momentum-
+    amplified) update into the gradient-equivalent displacement the α rules
+    expect (scale = Optimizer.dx_scale, e.g. 1-μ for heavy-ball SGD)."""
+    if scale == 1.0:
+        return stats
+    s2 = scale * scale
+    return DxStats(
+        sq=stats.sq * s2,
+        leaf_sq=jax.tree.map(lambda v: v * s2, stats.leaf_sq),
+    )
+
+
 def psum_stats(stats: DxStats, axis: Optional[str]) -> DxStats:
     if axis is None:
         return stats

@@ -144,6 +144,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, compressor: str = "int
         "generated_code_bytes": int(ma.generated_code_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older JAX: one dict per device
+        ca = ca[0] if ca else {}
     hlo_flops = float(ca.get("flops", 0.0))
     hlo_bytes = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -1,30 +1,24 @@
 """Production mesh construction.
 
-A FUNCTION (not a module-level constant) so importing this module never
+FUNCTIONS (not module-level constants) so importing this module never
 touches jax device state — smoke tests must keep seeing 1 CPU device; only
 dryrun.py sets the 512-placeholder-device XLA flag before first jax use.
+
+The axis-name helpers (dp_axes_of, dp_sizes_of) live in
+:mod:`repro.parallel.collectives`, the version-portable collectives layer.
 """
 from __future__ import annotations
 
-import jax
+from repro.parallel.collectives import mesh_from_counts
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def dp_axes_of(mesh) -> tuple[str, ...]:
-    """The data-parallel (gradient-sync) axes: everything except `model`."""
-    return tuple(a for a in mesh.axis_names if a != "model")
-
-
-def dp_sizes_of(mesh) -> tuple[int, ...]:
-    return tuple(mesh.shape[a] for a in dp_axes_of(mesh))
+    if multi_pod:
+        return mesh_from_counts(pod=2, data=16, model=16)
+    return mesh_from_counts(data=16, model=16)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-device CPU tests (spawned with forced host
     device count in a subprocess)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
+    return mesh_from_counts(data=n_data, model=n_model)

@@ -11,6 +11,7 @@ import jax
 
 from repro.configs import get_arch, smoke_config
 from repro.models.transformer import init_lm_params
+from repro.parallel.collectives import mesh_from_counts
 from repro.serving.engine import Request, ServeEngine
 
 
@@ -20,11 +21,15 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mesh", action="store_true",
+                    help="run decode through the shard_map pipeline on a "
+                         "1x1 mesh (the sharded-serve lowering path)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_arch(args.arch))
     params = init_lm_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, max_seq=128)
+    mesh = mesh_from_counts(data=1, model=1) if args.mesh else None
+    eng = ServeEngine(cfg, params, slots=args.slots, max_seq=128, mesh=mesh)
     key = jax.random.PRNGKey(1)
     for r in range(args.requests):
         k = jax.random.fold_in(key, r)

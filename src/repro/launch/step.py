@@ -1,7 +1,8 @@
-"""Train / serve step construction over the production mesh.
+"""Train / serve / eval step construction over the production mesh.
 
-One ``shard_map`` per step, manual collectives inside (Megatron-JAX style,
-check_vma disabled):
+One ``shard_map`` per step (via the version-portable layer
+:mod:`repro.parallel.collectives`), manual collectives inside (Megatron-JAX
+style, replication checks disabled):
 
   * forward/backward with TP collectives (psum over "model");
   * gradients of REPLICATED params psum'd over "model" (each TP member holds
@@ -9,8 +10,16 @@ check_vma disabled):
   * IntSGD (or any baseline compressor) aggregates gradients across the
     data-parallel axes — for IntSGD the wire carries ONLY integers (psum of
     int32), the paper's contract;
-  * ZeRO-1 optimizer update on dp-sharded f32 masters, bf16 param
-    all-gather.
+  * optimizer update, routed one of two ways:
+      - "zero1": ZeRO-1 update on dp-sharded f32 masters, bf16 param
+        all-gather (the default);
+      - "fused": the Pallas decode+SGD kernel (kernels/ops.fused_update) —
+        integer dequantization folded into the momentum-SGD update, one HBM
+        pass, params updated in place of a master copy.
+
+Every builder (train / init / serve / eval) resolves the SAME
+:class:`Layout` and terminates in the SAME ``collectives.sharded_jit``
+pipeline — there is exactly one shard_map+jit construction path.
 
 The first optimization step uses exact (float) aggregation per paper §4.1 —
 drivers call the `exact` step once, then the compressed step.
@@ -24,39 +33,29 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.comm import CommCtx
-from repro.core.compressor import Compressor, aggregate_exact
-from repro.core.stats import DxStats, TreeDims
+from repro.core.compressor import Compressor, IntSGD, aggregate_exact
+from repro.core.stats import DxStats, TreeDims, scale_dx_stats
 from repro.launch import specs as specs_mod
-from repro.launch.mesh import dp_axes_of, dp_sizes_of
 from repro.models.common import Axes
-from repro.models.decode import init_lm_cache, lm_decode_step, tp_greedy
+from repro.models.decode import lm_decode_step, tp_greedy
 from repro.models.encdec import (
     encdec_decode_step,
     encdec_loss,
     encode as encdec_encode,
-    init_encdec_params,
 )
-from repro.models.transformer import (
-    init_lm_params,
-    lm_forward,
-    lm_logits_local,
-    lm_loss,
-)
-from repro.optim.base import Optimizer, apply_updates
+from repro.models.transformer import lm_forward, lm_logits_local, lm_loss
+from repro.optim.base import Optimizer
 from repro.optim.zero1 import zero1_init, zero1_state_specs, zero1_update
+from repro.parallel import collectives as coll
 
 
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
-def _dp_spec(dp):
-    return dp if len(dp) > 1 else dp[0]
-
-
 def _replicated_mask(pspecs):
     return jax.tree.map(lambda s: all(p is None for p in s), pspecs)
 
@@ -68,11 +67,10 @@ def _fix_replicated_grads(grads, rep_mask, model_axis):
     )
 
 
-def _global_dx_stats(updates, rep_mask, model_axis) -> DxStats:
-    """GLOBAL ||Δx||² from local shards with ONE psum of a stacked vector."""
-    leaf_sq = jax.tree.map(
-        lambda u: jnp.sum(jnp.square(u.astype(jnp.float32))), updates
-    )
+def _global_reduce_leaf_sq(leaf_sq, rep_mask, model_axis) -> DxStats:
+    """Reduce local per-leaf squared norms to GLOBAL values with ONE psum of
+    a stacked vector (TP-sharded leaves summed over "model", replicated
+    leaves passed through)."""
     leaves, treedef = jax.tree.flatten(leaf_sq)
     reps = jax.tree.leaves(rep_mask)
     vec = jnp.stack(leaves)
@@ -84,6 +82,14 @@ def _global_dx_stats(updates, rep_mask, model_axis) -> DxStats:
     return DxStats(sq=jnp.sum(vec), leaf_sq=leaf_sq)
 
 
+def _global_dx_stats(updates, rep_mask, model_axis) -> DxStats:
+    """GLOBAL ||Δx||² from local shards."""
+    leaf_sq = jax.tree.map(
+        lambda u: jnp.sum(jnp.square(u.astype(jnp.float32))), updates
+    )
+    return _global_reduce_leaf_sq(leaf_sq, rep_mask, model_axis)
+
+
 @dataclasses.dataclass
 class StepArtifacts:
     """Everything the dry-run / trainer needs for one (arch, shape, mesh)."""
@@ -93,14 +99,6 @@ class StepArtifacts:
     in_shardings: tuple
     out_shardings: Any
     abstract_state: Any  # init-time state structs (for real runs)
-
-
-def _shardings(mesh, tree_specs):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s),
-        tree_specs,
-        is_leaf=lambda x: isinstance(x, P),
-    )
 
 
 def _zero1_shapes_global(local_state, tp):
@@ -141,6 +139,278 @@ def _loss_fn_for(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# layout resolution — ONE place derives (tp, dp, specs) for every builder
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Resolved execution layout of (cfg, mesh): axes, specs and masks the
+    train / init / serve / eval builders all share."""
+
+    cfg: ModelConfig
+    mesh: Any
+    tp: int
+    dp: tuple  # data-parallel (gradient-sync) axis names
+    dp_sizes: tuple
+    n_dp: int
+    axes: Axes  # model-code axis handles (TP)
+    ctx: CommCtx  # compressor communication context
+    pspecs: Any  # param PartitionSpecs
+    rep_mask: Any  # which param leaves are TP-replicated
+    g_shapes: Any  # global param ShapeDtypeStructs (param_dtype)
+    l_shapes: Any  # local param ShapeDtypeStructs (param_dtype)
+    dims: TreeDims  # global model dimensionality (α's d)
+
+    @property
+    def dp_spec(self):
+        return coll.axis_spec(self.dp)
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return "model" if self.tp > 1 else None
+
+
+def resolve_layout(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    param_dtype=jnp.bfloat16,
+    tp_override: Optional[int] = None,
+    remap_tp1: bool = False,
+) -> Layout:
+    """Derive the layout. With ``remap_tp1`` (train path), a tp==1 override
+    turns the whole mesh data-parallel: the model is replicated and IntSGD
+    aggregates over every chip."""
+    tp = tp_override if tp_override is not None else mesh.shape["model"]
+    if remap_tp1 and tp == 1:
+        dp = tuple(mesh.axis_names)
+    else:
+        dp = coll.dp_axes_of(mesh)
+    dp_sizes = tuple(mesh.shape[a] for a in dp)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    axes = Axes(tp="model", tp_size=tp) if tp > 1 else Axes()
+    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
+    g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
+    cast = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), t
+    )
+    return Layout(
+        cfg=cfg,
+        mesh=mesh,
+        tp=tp,
+        dp=dp,
+        dp_sizes=dp_sizes,
+        n_dp=n_dp,
+        axes=axes,
+        ctx=ctx,
+        pspecs=pspecs,
+        rep_mask=_replicated_mask(pspecs),
+        g_shapes=cast(g_shapes),
+        l_shapes=cast(l_shapes),
+        dims=specs_mod.global_tree_dims(cfg, tp),
+    )
+
+
+def _sharded(layout: Layout, body, in_specs, out_specs, *, donate=(),
+             shard_outputs=True):
+    """The single shard_map+jit pipeline every builder terminates in."""
+    return coll.sharded_jit(
+        body,
+        layout.mesh,
+        in_specs,
+        out_specs,
+        donate=donate,
+        shard_outputs=shard_outputs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared step-body stages
+# ---------------------------------------------------------------------------
+def _forward_backward(layout: Layout, loss_fn, params, batch):
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, layout.axes, layout.cfg, dtype=jnp.bfloat16)
+    )(params)
+    if layout.tp > 1:
+        grads = _fix_replicated_grads(grads, layout.rep_mask, "model")
+    return loss, grads
+
+
+def _unstack_comp(comp_state):
+    return jax.tree.map(lambda x: x[0] if x.ndim >= 1 else x, comp_state)
+
+
+def _restack_comp(cs, comp_state_like):
+    new = jax.tree.map(lambda x: x[None] if x.ndim >= 0 else x, cs)
+    return jax.tree.map(
+        lambda x, like: x.reshape(like.shape), new, comp_state_like
+    )
+
+
+def _observe_dx(layout: Layout, compressor, base_opt, cs, new_params, params):
+    """Δx stats -> α rule, rescaled to gradient-equivalent units
+    (base_opt.dx_scale — §4.1 momentum correction)."""
+    delta = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        new_params,
+        params,
+    )
+    dx_stats = _global_dx_stats(delta, layout.rep_mask, layout.model_axis)
+    return compressor.observe_update(
+        cs, scale_dx_stats(dx_stats, base_opt.dx_scale)
+    )
+
+
+def _fused_sgd_hyper(base_opt: Optimizer, compressor: Compressor):
+    """Validate + extract (μ, wd) for the fused decode+SGD kernel route."""
+    if not isinstance(compressor, IntSGD):
+        raise ValueError(
+            "fused update routing needs an integer wire (IntSGD family); got "
+            f"{type(compressor).__name__}"
+        )
+    if base_opt.kind != "sgd" or base_opt.hyper is None:
+        raise ValueError(
+            "fused update routing fuses dequantize+momentum-SGD; base_opt "
+            f"must be optim.sgd (got kind={base_opt.kind!r})"
+        )
+    if base_opt.hyper.get("nesterov"):
+        raise ValueError("fused update routing does not support nesterov")
+    return float(base_opt.hyper["momentum"]), float(
+        base_opt.hyper["weight_decay"]
+    )
+
+
+def _clip_factor(layout: Layout, clip_norm, *, ghat=None, int_sum=None,
+                 alphas=None):
+    """Global-norm gradient clip factor min(1, c/||ĝ||). For the fused
+    integer route ||ĝ||² is computed straight off the wire payload
+    (||ĝ_l||² = ||Σints_l||²/(nα_l)²) so ĝ is never materialized."""
+    if int_sum is not None:
+        n = layout.ctx.n
+        leaf_sq = jax.tree.map(
+            lambda s, a: jnp.sum(jnp.square(s.astype(jnp.float32)))
+            / jnp.square(n * a),
+            int_sum,
+            alphas,
+        )
+    else:
+        leaf_sq = jax.tree.map(
+            lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), ghat
+        )
+    sq = _global_reduce_leaf_sq(leaf_sq, layout.rep_mask, layout.model_axis).sq
+    return jnp.minimum(1.0, clip_norm / (jnp.sqrt(sq) + 1e-12))
+
+
+def _make_train_body(
+    layout: Layout,
+    *,
+    loss_fn,
+    compressor: Compressor,
+    base_opt: Optimizer,
+    lr_schedule: Callable,
+    param_dtype,
+    exact: bool,
+    update_route: str,  # "zero1" | "fused"
+    clip_norm: Optional[float] = None,
+):
+    """The ONE train/optimize step body, parameterized by (loss, compressor,
+    optimizer, fused-kernel routing, clipping). All jitted train variants are
+    built from it."""
+    if update_route == "fused":
+        mu, wd = _fused_sgd_hyper(base_opt, compressor)
+
+    def step(params, opt_state, comp_state, step_idx, key, batch):
+        eta = lr_schedule(step_idx)
+        loss, grads = _forward_backward(layout, loss_fn, params, batch)
+        cs = _unstack_comp(comp_state)
+        int_sum = alphas = None
+        if exact:
+            ghat = aggregate_exact(grads, layout.ctx)
+            metrics = (jnp.zeros(()), jnp.zeros(()))
+        else:
+            akey = jax.random.fold_in(key, 1)
+            if update_route == "fused":
+                int_sum, alphas, cs, m = compressor.aggregate_wire(
+                    cs, grads, key=akey, eta=eta, ctx=layout.ctx,
+                    dims=layout.dims,
+                )
+                ghat = None
+            else:
+                ghat, cs, m = compressor.aggregate(
+                    cs, grads, key=akey, eta=eta, ctx=layout.ctx,
+                    dims=layout.dims,
+                )
+            m_axes = layout.dp + (("model",) if layout.tp > 1 else ())
+            metrics = (
+                lax.pmax(m.max_int, m_axes),
+                lax.pmax(m.bits_per_coord, m_axes),
+            )
+
+        if clip_norm is not None:
+            scale = _clip_factor(
+                layout, clip_norm, ghat=ghat, int_sum=int_sum, alphas=alphas
+            )
+            if ghat is not None:
+                ghat = jax.tree.map(lambda g: g * scale, ghat)
+            else:  # fused: fold the clip into the dequantization scalar
+                alphas = jax.tree.map(lambda a: a / scale, alphas)
+
+        if update_route == "fused":
+            new_params, new_opt = _fused_update_stage(
+                layout, params, opt_state, eta, mu, wd,
+                ghat=ghat, int_sum=int_sum, alphas=alphas,
+            )
+        else:
+            new_params, new_opt = zero1_update(
+                base_opt,
+                opt_state,
+                ghat,
+                eta,
+                dp_axes=layout.dp,
+                dp_index=layout.ctx.worker_index(),
+                n_dp=layout.n_dp,
+                param_dtype=param_dtype,
+                params_like=params,
+            )
+        cs = _observe_dx(layout, compressor, base_opt, cs, new_params, params)
+        new_comp = _restack_comp(cs, comp_state)
+        loss_g = lax.psum(loss, layout.dp) / layout.n_dp
+        return new_params, new_opt, new_comp, loss_g, metrics
+
+    return step
+
+
+def _fused_update_stage(layout: Layout, params, opt_state, eta, mu, wd, *,
+                        ghat, int_sum, alphas):
+    """Pallas fused dequantize+momentum+SGD route: one HBM pass per leaf,
+    params updated directly (no ZeRO master shard). The exact (step-0) path
+    has no integer payload and runs the same arithmetic unfused."""
+    mom = opt_state["mom"]
+    if int_sum is None:  # exact aggregation path
+        def leaf(p, m, g):
+            p32 = p.astype(jnp.float32)
+            g32 = g.astype(jnp.float32) + wd * p32
+            m32 = mu * m + g32
+            return (p32 - eta * m32).astype(p.dtype), m32
+
+        outs = jax.tree.map(leaf, params, mom, ghat)
+    else:
+        from repro.kernels import ops as kops
+
+        def leaf(p, m, s, a):
+            return kops.fused_update(
+                s, p, m, 1.0 / (layout.ctx.n * a), eta, mu, wd
+            )
+
+        outs = jax.tree.map(leaf, params, mom, int_sum, alphas)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=is_pair)
+    new_mom = jax.tree.map(lambda o: o[1], outs, is_leaf=is_pair)
+    return new_params, {"mom": new_mom}
+
+
+# ---------------------------------------------------------------------------
 # train step
 # ---------------------------------------------------------------------------
 def build_train_step(
@@ -155,122 +425,76 @@ def build_train_step(
     exact_first: bool = False,
     donate: bool = True,
     tp_override: Optional[int] = None,
+    fused: bool = False,
+    clip_norm: Optional[float] = None,
 ) -> StepArtifacts:
     from repro.launch.inputs import input_specs
 
-    tp = tp_override if tp_override is not None else mesh.shape["model"]
-    if tp == 1:
-        # tiny-model axis remap: the whole mesh becomes data-parallel; the
-        # model is replicated and IntSGD aggregates over every chip
-        dp = tuple(mesh.axis_names)
-    else:
-        dp = dp_axes_of(mesh)
-    dp_sizes = tuple(mesh.shape[a] for a in dp)
-    n_dp = 1
-    for s in dp_sizes:
-        n_dp *= s
-    axes = Axes(tp="model", tp_size=tp) if tp > 1 else Axes()
-    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
+    layout = resolve_layout(
+        cfg, mesh, param_dtype=param_dtype, tp_override=tp_override,
+        remap_tp1=True,
+    )
     loss_fn = _loss_fn_for(cfg)
 
-    g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
-    g_shapes = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), g_shapes
+    if fused:
+        opt_local = {"mom": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            layout.l_shapes,
+        )}
+        opt_global = {"mom": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            layout.g_shapes,
+        )}
+        opt_specs = {"mom": layout.pspecs}
+    else:
+        opt_local = jax.eval_shape(
+            partial(zero1_init, base_opt, n_dp=layout.n_dp), layout.l_shapes
+        )
+        opt_global = _zero1_shapes_global(opt_local, layout.tp)
+        opt_specs = zero1_state_specs(
+            opt_local, layout.dp_spec, model_axis=layout.model_axis
+        )
+    comp_global, comp_leaf_specs = _comp_state_shapes(
+        compressor, cfg, layout.tp, layout.n_dp
     )
-    rep_mask = _replicated_mask(pspecs)
-    dims = specs_mod.global_tree_dims(cfg, tp)
-
-    l_params = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), l_shapes
-    )
-    opt_local = jax.eval_shape(partial(zero1_init, base_opt, n_dp=n_dp), l_params)
-    opt_global = _zero1_shapes_global(opt_local, tp)
-    opt_specs = zero1_state_specs(
-        opt_local, _dp_spec(dp), model_axis="model" if tp > 1 else None
-    )
-    comp_global, comp_leaf_specs = _comp_state_shapes(compressor, cfg, tp, n_dp)
     comp_specs = jax.tree.map(
-        lambda x, base: P(*([_dp_spec(dp)] + list(base))),
+        lambda x, base: P(*([layout.dp_spec] + list(base))),
         comp_global,
         comp_leaf_specs,
     )
 
     batch_struct = input_specs(cfg, shape, kind="train")
-    batch_specs = specs_mod.batch_pspecs(batch_struct, dp=dp)
-
-    def step(params, opt_state, comp_state, step_idx, key, batch, *, exact):
-        eta = lr_schedule(step_idx)
-        loss, grads = jax.value_and_grad(
-            lambda p: loss_fn(p, batch, axes, cfg, dtype=jnp.bfloat16)
-        )(params)
-        if tp > 1:
-            grads = _fix_replicated_grads(grads, rep_mask, "model")
-        cs = jax.tree.map(lambda x: x[0] if x.ndim >= 1 else x, comp_state)
-        if exact:
-            ghat = aggregate_exact(grads, ctx)
-            metrics = (jnp.zeros(()), jnp.zeros(()))
-        else:
-            ghat, cs, m = compressor.aggregate(
-                cs, grads, key=jax.random.fold_in(key, 1), eta=eta, ctx=ctx, dims=dims
-            )
-            m_axes = dp + (("model",) if tp > 1 else ())
-            metrics = (
-                lax.pmax(m.max_int, m_axes),
-                lax.pmax(m.bits_per_coord, m_axes),
-            )
-        dp_index = ctx.worker_index()
-        new_params, new_opt = zero1_update(
-            base_opt,
-            opt_state,
-            ghat,
-            eta,
-            dp_axes=dp,
-            dp_index=dp_index,
-            n_dp=n_dp,
-            param_dtype=param_dtype,
-            params_like=params,
-        )
-        delta = jax.tree.map(
-            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-            new_params,
-            params,
-        )
-        dx_stats = _global_dx_stats(delta, rep_mask, "model" if tp > 1 else None)
-        cs = compressor.observe_update(cs, dx_stats)
-        new_comp = jax.tree.map(lambda x: x[None] if x.ndim >= 0 else x, cs)
-        new_comp = jax.tree.map(
-            lambda x, like: x.reshape(like.shape), new_comp, comp_state
-        )
-        loss_g = lax.psum(loss, dp) / n_dp
-        return new_params, new_opt, new_comp, loss_g, metrics
+    batch_specs = specs_mod.batch_pspecs(batch_struct, dp=layout.dp)
 
     in_specs = (
-        pspecs,
+        layout.pspecs,
         opt_specs,
         comp_specs,
         P(),
         P(),
         batch_specs,
     )
-    out_specs = (pspecs, opt_specs, comp_specs, P(), (P(), P()))
+    out_specs = (layout.pspecs, opt_specs, comp_specs, P(), (P(), P()))
 
     def make(exact):
-        sm = jax.shard_map(
-            partial(step, exact=exact),
-            mesh=mesh,
-            in_specs=in_specs,
-            out_specs=out_specs,
-            check_vma=False,
+        body = _make_train_body(
+            layout,
+            loss_fn=loss_fn,
+            compressor=compressor,
+            base_opt=base_opt,
+            lr_schedule=lr_schedule,
+            param_dtype=param_dtype,
+            exact=exact,
+            update_route="fused" if fused else "zero1",
+            clip_norm=clip_norm,
         )
-        return jax.jit(
-            sm,
-            in_shardings=_shardings(mesh, in_specs),
-            out_shardings=_shardings(mesh, out_specs),
-            donate_argnums=(0, 1, 2) if donate else (),
+        return _sharded(
+            layout, body, in_specs, out_specs,
+            donate=(0, 1, 2) if donate else (),
         )
 
     arg_structs = (
-        g_shapes,
+        layout.g_shapes,
         opt_global,
         comp_global,
         jax.ShapeDtypeStruct((), jnp.int32),
@@ -280,8 +504,8 @@ def build_train_step(
     return StepArtifacts(
         jitted={"compressed": make(False), "exact": make(True)},
         arg_structs=arg_structs,
-        in_shardings=_shardings(mesh, in_specs),
-        out_shardings=_shardings(mesh, out_specs),
+        in_shardings=coll.named_shardings(mesh, in_specs),
+        out_shardings=coll.named_shardings(mesh, out_specs),
         abstract_state=None,
     )
 
@@ -292,62 +516,104 @@ def build_init_state(
     *,
     compressor: Compressor,
     base_opt: Optimizer,
+    fused: bool = False,
 ):
     """jitted (global params) -> (opt_state, comp_state) with correct
-    ZeRO-1 layout (masters == initial params) and dp-stacked compressor
-    state."""
-    dp = dp_axes_of(mesh)
-    dp_sizes = dp_sizes_of(mesh)
-    n_dp = 1
-    for s in dp_sizes:
-        n_dp *= s
-    tp = mesh.shape["model"]
-    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
-    _, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
-    l_params_f32 = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), l_shapes
+    optimizer layout — ZeRO-1 masters (== initial params) by default, a
+    replicated f32 momentum tree for the fused route — and dp-stacked
+    compressor state."""
+    layout = resolve_layout(cfg, mesh, param_dtype=jnp.float32)
+    comp_global, comp_leaf_specs = _comp_state_shapes(
+        compressor, cfg, layout.tp, layout.n_dp
     )
-    opt_local = jax.eval_shape(
-        partial(zero1_init, base_opt, n_dp=n_dp), l_params_f32
-    )
-    opt_specs = zero1_state_specs(
-        opt_local, _dp_spec(dp), model_axis="model" if tp > 1 else None
-    )
-    comp_global, comp_leaf_specs = _comp_state_shapes(compressor, cfg, tp, n_dp)
     comp_specs = jax.tree.map(
-        lambda x, base: P(*([_dp_spec(dp)] + list(base))),
+        lambda x, base: P(*([layout.dp_spec] + list(base))),
         comp_global,
         comp_leaf_specs,
     )
 
-    from repro.optim.zero1 import shard_leaf
+    if fused:
+        opt_specs = {"mom": layout.pspecs}
 
-    def init_fn(params):
-        dp_index = ctx.worker_index()
-        masters_full = jax.tree.map(lambda p: shard_leaf(p, n_dp), params)
-        my = jax.tree.map(
-            lambda m: lax.dynamic_slice_in_dim(m, dp_index, 1, 0), masters_full
-        )
-        base_state = base_opt.init(jax.tree.map(lambda m: m[0], my))
-        restack = lambda t: jax.tree.map(
-            lambda x: x[None] if x.ndim >= 1 else x, t
-        )
-        opt_state = {"master": my, "base": restack(base_state)}
-        cs = compressor.init(params)
-        cs = jax.tree.map(lambda x: jnp.asarray(x)[None], cs)
-        return opt_state, cs
+        def init_fn(params):
+            opt_state = {"mom": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )}
+            cs = compressor.init(params)
+            cs = jax.tree.map(lambda x: jnp.asarray(x)[None], cs)
+            return opt_state, cs
 
-    sm = jax.shard_map(
-        init_fn,
-        mesh=mesh,
-        in_specs=(pspecs,),
-        out_specs=(opt_specs, comp_specs),
-        check_vma=False,
+    else:
+        l_params_f32 = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            layout.l_shapes,
+        )
+        opt_local = jax.eval_shape(
+            partial(zero1_init, base_opt, n_dp=layout.n_dp), l_params_f32
+        )
+        opt_specs = zero1_state_specs(
+            opt_local, layout.dp_spec, model_axis=layout.model_axis
+        )
+
+        from repro.optim.zero1 import shard_leaf
+
+        def init_fn(params):
+            dp_index = layout.ctx.worker_index()
+            masters_full = jax.tree.map(
+                lambda p: shard_leaf(p, layout.n_dp), params
+            )
+            my = jax.tree.map(
+                lambda m: lax.dynamic_slice_in_dim(m, dp_index, 1, 0),
+                masters_full,
+            )
+            base_state = base_opt.init(jax.tree.map(lambda m: m[0], my))
+            restack = lambda t: jax.tree.map(
+                lambda x: x[None] if x.ndim >= 1 else x, t
+            )
+            opt_state = {"master": my, "base": restack(base_state)}
+            cs = compressor.init(params)
+            cs = jax.tree.map(lambda x: jnp.asarray(x)[None], cs)
+            return opt_state, cs
+
+    return _sharded(
+        layout, init_fn, (layout.pspecs,), (opt_specs, comp_specs)
     )
-    return jax.jit(
-        sm,
-        in_shardings=(_shardings(mesh, pspecs),),
-        out_shardings=_shardings(mesh, (opt_specs, comp_specs)),
+
+
+# ---------------------------------------------------------------------------
+# eval step (loss-only — validation / perplexity sweeps)
+# ---------------------------------------------------------------------------
+def build_eval_step(
+    cfg: ModelConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    param_dtype=jnp.bfloat16,
+) -> StepArtifacts:
+    """Forward-only loss over the mesh: the train body's forward stage with
+    aggregation/update routing stripped."""
+    from repro.launch.inputs import input_specs
+
+    layout = resolve_layout(
+        cfg, mesh, param_dtype=param_dtype, remap_tp1=True
+    )
+    loss_fn = _loss_fn_for(cfg)
+
+    batch_struct = input_specs(cfg, shape, kind="train")
+    batch_specs = specs_mod.batch_pspecs(batch_struct, dp=layout.dp)
+
+    def body(params, batch):
+        loss = loss_fn(params, batch, layout.axes, layout.cfg, dtype=jnp.bfloat16)
+        return lax.psum(loss, layout.dp) / layout.n_dp
+
+    in_specs = (layout.pspecs, batch_specs)
+    jitted = _sharded(layout, body, in_specs, P())
+    return StepArtifacts(
+        jitted={"eval": jitted},
+        arg_structs=(layout.g_shapes, batch_struct),
+        in_shardings=coll.named_shardings(mesh, in_specs),
+        out_shardings=None,
+        abstract_state=None,
     )
 
 
@@ -363,12 +629,8 @@ def build_serve_step(
 ) -> StepArtifacts:
     from repro.launch.inputs import input_specs
 
-    dp = dp_axes_of(mesh)
-    dp_sizes = dp_sizes_of(mesh)
-    n_dp = 1
-    for s in dp_sizes:
-        n_dp *= s
-    tp = mesh.shape["model"]
+    layout = resolve_layout(cfg, mesh, param_dtype=param_dtype)
+    dp, dp_sizes, n_dp, tp = layout.dp, layout.dp_sizes, layout.n_dp, layout.tp
     seq_sharded = shape.kind == "decode" and shape.global_batch < n_dp
     if seq_sharded:
         axes = Axes(tp="model", tp_size=tp, sp=dp, sp_sizes=dp_sizes)
@@ -378,11 +640,6 @@ def build_serve_step(
         axes = Axes(tp="model", tp_size=tp)
         b_local = max(1, shape.global_batch // n_dp)
         s_local = shape.seq_len
-
-    g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
-    g_shapes = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), g_shapes
-    )
 
     if shape.kind == "prefill":
         batch_struct = input_specs(cfg, shape, kind="prefill")
@@ -399,18 +656,16 @@ def build_serve_step(
                 logits = lm_logits_local(params, h[:, -1:], cfg)[:, 0]
             return logits
 
-        in_specs = (pspecs, batch_specs)
-        out_specs = P(_dp_spec(dp), "model")
-        sm = jax.shard_map(
-            prefill, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
+        in_specs = (layout.pspecs, batch_specs)
+        out_specs = P(layout.dp_spec, "model")
+        jitted = _sharded(
+            layout, prefill, in_specs, out_specs, shard_outputs=False
         )
-        jitted = jax.jit(sm, in_shardings=_shardings(mesh, in_specs))
-        arg_structs = (g_shapes, batch_struct)
+        arg_structs = (layout.g_shapes, batch_struct)
         return StepArtifacts(
             jitted={"prefill": jitted},
             arg_structs=arg_structs,
-            in_shardings=_shardings(mesh, in_specs),
+            in_shardings=coll.named_shardings(mesh, in_specs),
             out_shardings=None,
             abstract_state=None,
         )
@@ -439,7 +694,7 @@ def build_serve_step(
 
     tok_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     pos_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
-    tok_spec = P() if seq_sharded else P(_dp_spec(dp))
+    tok_spec = P() if seq_sharded else P(layout.dp_spec)
 
     def decode(params, cache, tokens, pos):
         if cfg.family == "encdec":
@@ -451,22 +706,14 @@ def build_serve_step(
         next_tok = tp_greedy(logits, axes)
         return next_tok, new_cache
 
-    in_specs = (pspecs, cache_specs, tok_spec, tok_spec)
+    in_specs = (layout.pspecs, cache_specs, tok_spec, tok_spec)
     out_specs = (tok_spec, cache_specs)
-    sm = jax.shard_map(
-        decode, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
-    )
-    jitted = jax.jit(
-        sm,
-        in_shardings=_shardings(mesh, in_specs),
-        out_shardings=_shardings(mesh, out_specs),
-        donate_argnums=(1,),
-    )
-    arg_structs = (g_shapes, cache_global, tok_struct, pos_struct)
+    jitted = _sharded(layout, decode, in_specs, out_specs, donate=(1,))
+    arg_structs = (layout.g_shapes, cache_global, tok_struct, pos_struct)
     return StepArtifacts(
         jitted={"decode": jitted},
         arg_structs=arg_structs,
-        in_shardings=_shardings(mesh, in_specs),
-        out_shardings=_shardings(mesh, out_specs),
+        in_shardings=coll.named_shardings(mesh, in_specs),
+        out_shardings=coll.named_shardings(mesh, out_specs),
         abstract_state=None,
     )

@@ -20,13 +20,11 @@ from repro.checkpoint import CheckpointStore
 from repro.configs import ShapeConfig, get_arch, smoke_config
 from repro.core import make_compressor
 from repro.data.synthetic import SyntheticLMData
-from repro.launch.inputs import input_specs
-from repro.launch.specs import batch_pspecs
 from repro.launch.step import build_init_state, build_train_step
 from repro.models.transformer import init_lm_params
 from repro.optim import sgd
 from repro.optim.schedules import constant, warmup_wrap
-from jax.sharding import NamedSharding
+from repro.parallel.collectives import mesh_from_counts
 
 
 def train_loop(
@@ -43,6 +41,8 @@ def train_loop(
     param_dtype=jnp.float32,
     log_every: int = 5,
     seed: int = 0,
+    fused: bool = False,
+    clip_norm: float | None = 1.0,
 ):
     comp = make_compressor(compressor)
     opt = sgd(momentum=0.9, weight_decay=1e-4)
@@ -50,6 +50,7 @@ def train_loop(
     art = build_train_step(
         cfg, mesh, shape, compressor=comp, base_opt=opt,
         lr_schedule=sched, param_dtype=param_dtype,
+        fused=fused, clip_norm=clip_norm,
     )
     tp = mesh.shape["model"]
     n_dp = mesh.size // tp
@@ -67,7 +68,9 @@ def train_loop(
     else:
         params = init_lm_params(key, cfg, tp=tp, n_shards=1, dtype=param_dtype)
         params = jax.device_put(params, art.in_shardings[0])
-        init = build_init_state(cfg, mesh, compressor=comp, base_opt=opt)
+        init = build_init_state(
+            cfg, mesh, compressor=comp, base_opt=opt, fused=fused
+        )
         opt_state, comp_state = init(params)
 
     data = SyntheticLMData(
@@ -111,18 +114,23 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--fused", action="store_true",
+                    help="route the update through the Pallas fused "
+                         "dequantize+SGD kernel")
+    ap.add_argument("--clip-norm", type=float, default=1.0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    mesh = jax.make_mesh((args.data, args.model), ("data", "model"))
+    mesh = mesh_from_counts(data=args.data, model=args.model)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     ckpt = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
     train_loop(
         cfg, mesh, shape,
         compressor=args.compressor, steps=args.steps, lr=args.lr,
-        ckpt=ckpt, resume=args.resume,
+        ckpt=ckpt, resume=args.resume, fused=args.fused,
+        clip_norm=args.clip_norm,
     )
 
 

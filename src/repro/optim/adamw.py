@@ -38,4 +38,9 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: fl
         updates = jax.tree.map(upd, mu, nu, params)
         return updates, {"mu": mu, "nu": nu, "count": count}
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(
+        init=init,
+        update=update,
+        kind="adamw",
+        hyper=dict(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay),
+    )

@@ -7,11 +7,23 @@ An Optimizer is a pair of pure functions::
 
 ``updates`` are *added* to params (they already include the -lr factor). The
 learning rate is threaded explicitly because IntSGD's α rule needs η_k.
+
+``dx_scale`` converts the *applied* update Δx into the gradient-equivalent
+displacement the IntSGD α rules are analyzed for (paper §4.1): with heavy-
+ball momentum μ the steady-state update is amplified by 1/(1-μ) relative to
+η·g, and the quantization noise it injects into x is amplified by the same
+factor — so the α rule must see (1-μ)·||Δx||, i.e. dx_scale = 1-μ. Plain
+SGD and scale-free optimizers (Adam) use 1.0. Trainers multiply the DxStats
+fed to ``Compressor.observe_update`` by dx_scale² (see stats.scale_dx_stats).
+
+``kind``/``hyper`` expose the update rule's identity to the step-builder
+pipeline so it can route onto fused kernels (kernels/ops.fused_update needs
+(momentum, weight_decay) of a plain SGD rule to fuse decode+update).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Mapping, Optional
 
 import jax
 
@@ -22,6 +34,9 @@ OptState = Any
 class Optimizer:
     init: Callable[[Any], OptState]
     update: Callable[..., tuple]  # (grads, state, params, lr) -> (updates, state)
+    dx_scale: float = 1.0  # applied-update -> gradient-equivalent factor
+    kind: str = "custom"  # "sgd" | "adamw" | "custom" (fused-kernel routing)
+    hyper: Optional[Mapping[str, Any]] = None  # static hyperparameters
 
 
 def apply_updates(params, updates):
@@ -40,4 +55,4 @@ def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
         grads = jax.tree.map(lambda g: g * scale, grads)
         return opt.update(grads, state, params, lr)
 
-    return Optimizer(init=opt.init, update=update)
+    return dataclasses.replace(opt, update=update, kind="custom")

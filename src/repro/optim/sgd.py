@@ -32,4 +32,12 @@ def sgd(momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False
             eff = new_m
         return jax.tree.map(lambda m: -lr * m, eff), new_m
 
-    return Optimizer(init=init, update=update)
+    # momentum amplifies the applied update (and the injected quantization
+    # noise) by 1/(1-μ) at steady state; the α rule sees (1-μ)²||Δx||².
+    return Optimizer(
+        init=init,
+        update=update,
+        dx_scale=1.0 - momentum,
+        kind="sgd",
+        hyper=dict(momentum=momentum, weight_decay=weight_decay, nesterov=nesterov),
+    )

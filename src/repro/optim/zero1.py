@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.optim.base import Optimizer
+from repro.parallel import collectives as coll
 
 
 def _pad_rows(flat, n_dp):
@@ -79,12 +80,8 @@ def zero1_update(
     new_master = jax.tree.map(lambda m, u: m + u, m_rows, updates)
 
     def gather_param(mrow, p_like):
-        shard = mrow.astype(param_dtype)
-        full = shard
-        for ax in reversed(dp_axes):
-            full = lax.all_gather(full, ax)
-        full = full.reshape(-1)[: p_like.size].reshape(p_like.shape)
-        return full
+        full = coll.all_gather_flat(mrow.astype(param_dtype), dp_axes, n_dp)
+        return full.reshape(-1)[: p_like.size].reshape(p_like.shape)
 
     new_params = jax.tree.map(gather_param, new_master, params_like)
     restack = lambda t: jax.tree.map(lambda x: x[None] if x.ndim >= 1 else x, t)

@@ -1,1 +1,3 @@
+from repro.parallel import collectives
+from repro.parallel.collectives import shard_map, sharded_jit
 from repro.parallel.pp import pipeline_forward

@@ -1,0 +1,188 @@
+"""Version-portable collectives layer — THE distributed execution surface.
+
+Every shard_map entry point, mesh helper and raw collective the codebase
+uses routes through this module, so JAX API drift is absorbed in exactly one
+place. Two generations of the API are supported by feature detection (never
+by version-string comparison):
+
+  * new-style ``jax.shard_map``         (replication check kwarg: check_vma)
+  * ``jax.experimental.shard_map``      (replication check kwarg: check_rep)
+
+Contract (relied on by launch/step.py, the tests and future backends):
+
+  * :func:`shard_map` — keyword-only (mesh, in_specs, out_specs, check_vma);
+    ``check_vma`` is translated to whatever the installed JAX calls its
+    replication/varying-manual-axes check.
+  * :func:`sharded_jit` — the step-builder pipeline terminal: shard_map the
+    body, jit it with NamedShardings derived from the same specs, optionally
+    donate buffers. All step builders terminate here.
+  * axis primitives (:func:`psum_tree`, :func:`pmax_tree`, ...) work both
+    inside shard_map over a real mesh AND inside ``vmap(axis_name=...)`` —
+    which is what lets the n-worker simulation (core/simulate.py) execute
+    the identical algorithm on one device.
+"""
+from __future__ import annotations
+
+import inspect
+from functools import partial
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# shard_map resolution (the ONE place in src/ that touches the raw API)
+# ---------------------------------------------------------------------------
+def _resolve_shard_map() -> Tuple[Callable, str | None]:
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental import shard_map as _esm
+
+        fn = _esm.shard_map
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        params = {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return fn, name
+    return fn, None
+
+
+_SHARD_MAP, _CHECK_KWARG = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Portable shard_map: maps ``check_vma`` onto the installed API."""
+    kwargs = {_CHECK_KWARG: check_vma} if _CHECK_KWARG else {}
+    return _SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+# ---------------------------------------------------------------------------
+# typed mesh helpers
+# ---------------------------------------------------------------------------
+def mesh_from_counts(*, data: int = 1, model: int = 1, pod: int | None = None):
+    """Build the production-shaped mesh from axis sizes."""
+    if pod is not None:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    """The data-parallel (gradient-sync) axes: everything except `model`."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_sizes_of(mesh) -> Tuple[int, ...]:
+    return tuple(mesh.shape[a] for a in dp_axes_of(mesh))
+
+
+def axis_spec(axes: Sequence[str]):
+    """PartitionSpec entry for one array dim sharded over `axes`."""
+    axes = tuple(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def named_shardings(mesh, tree_specs):
+    """PartitionSpec tree -> NamedSharding tree over `mesh`."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def sharded_jit(
+    body,
+    mesh,
+    in_specs,
+    out_specs,
+    *,
+    donate: Tuple[int, ...] = (),
+    shard_outputs: bool = True,
+    check_vma: bool = False,
+):
+    """The unified step-builder pipeline terminal: shard_map + jit.
+
+    Returns the jitted function; in/out NamedShardings are derivable from the
+    same specs via :func:`named_shardings` (step builders record them on
+    their StepArtifacts).
+    """
+    sm = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=check_vma,
+    )
+    return jax.jit(
+        sm,
+        in_shardings=named_shardings(mesh, in_specs),
+        out_shardings=named_shardings(mesh, out_specs) if shard_outputs else None,
+        donate_argnums=donate,
+    )
+
+
+# ---------------------------------------------------------------------------
+# axis primitives (work under shard_map AND vmap(axis_name=...))
+# ---------------------------------------------------------------------------
+def axis_index(axis: str):
+    return lax.axis_index(axis)
+
+
+def linear_axis_index(axes: Sequence[str], sizes: Sequence[int]):
+    """Row-major linearized index over several mesh axes, in [0, prod(sizes))."""
+    idx = 0
+    for ax, size in zip(axes, sizes):
+        idx = idx * size + lax.axis_index(ax)
+    return idx
+
+
+def psum_tree(x, axes):
+    return jax.tree.map(lambda v: lax.psum(v, axes), x)
+
+
+def pmax_tree(x, axes):
+    return jax.tree.map(lambda v: lax.pmax(v, axes), x)
+
+
+def pmean_tree(x, axes, n: int):
+    return jax.tree.map(lambda v: lax.psum(v, axes) / n, x)
+
+
+def all_gather_flat(v, axes: Sequence[str], n: int):
+    """Gather one array over `axes` with a flat leading worker axis of size n.
+
+    Worker order matches :func:`linear_axis_index` (row-major over `axes`).
+    """
+    out = v
+    for ax in reversed(tuple(axes)):
+        out = lax.all_gather(out, ax)
+    return out.reshape((n,) + v.shape)
+
+
+def all_gather_concat(v, axes: Sequence[str], n: int):
+    """Gather over `axes` concatenating along the existing leading dim
+    (the ZeRO-1 bf16 param all-gather layout)."""
+    return all_gather_flat(v, axes, n).reshape((-1,) + v.shape[1:])
+
+
+def ppermute_ring(x, axis: str, n: int, *, shift: int = 1):
+    """Send to the next device on a ring over `axis` (pipeline transfers)."""
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, axis, perm)
+
+
+# ---------------------------------------------------------------------------
+# single-device simulation of the worker axis
+# ---------------------------------------------------------------------------
+WORKER_AXIS = "workers"
+
+
+def vmap_workers(fn, in_axes, *, axis: str = WORKER_AXIS):
+    """vmap with an axis name: the n-worker simulation entry point. The axis
+    primitives above lower identically under this and under shard_map, which
+    is what lets CPU convergence tests validate the distributed algorithm."""
+    return jax.vmap(fn, in_axes=in_axes, axis_name=axis)

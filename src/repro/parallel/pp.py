@@ -14,11 +14,11 @@ data-parallel integer all-reduce happens per stage shard.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.parallel import collectives as coll
 
 
 def pipeline_forward(layer_fn, stage_params, x_micro, *, axis: str, n_stages: int):
@@ -32,8 +32,7 @@ def pipeline_forward(layer_fn, stage_params, x_micro, *, axis: str, n_stages: in
     Returns (n_micro, mb, ...) outputs valid on the LAST stage.
     """
     n_micro = x_micro.shape[0]
-    stage = lax.axis_index(axis)
-    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    stage = coll.axis_index(axis)
 
     def stage_apply(x):
         def body(h, lp):
@@ -58,7 +57,7 @@ def pipeline_forward(layer_fn, stage_params, x_micro, *, axis: str, n_stages: in
         out = stage_apply(my_in)
         out = jnp.where(active[None], out, jnp.zeros_like(out))
         # forward to next stage
-        nxt = lax.ppermute(out, axis, perm)
+        nxt = coll.ppermute_ring(out, axis, n_stages)
         # last stage records its finished microbatch
         done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
         record = (stage == n_stages - 1) & active

@@ -15,9 +15,11 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.models.common import Axes
 from repro.models.decode import init_lm_cache, lm_decode_step, tp_greedy
+from repro.parallel import collectives as coll
 
 
 @dataclasses.dataclass
@@ -30,7 +32,8 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256):
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.axes = Axes()
@@ -41,7 +44,17 @@ class ServeEngine:
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.pending: List[Request] = []
-        self._step = jax.jit(self._step_impl)
+        if mesh is not None:
+            # decode runs through the version-portable shard_map pipeline
+            # (replicated specs: every device steps the same batch — the
+            # lowering path the sharded launch/step.py builders share)
+            rep = jax.tree.map(lambda _: P(), (params, self.cache,
+                                               self.cur_tok, self.pos))
+            self._step = coll.sharded_jit(
+                self._step_impl, mesh, rep, (P(), P()),
+            )
+        else:
+            self._step = jax.jit(self._step_impl)
 
     def _step_impl(self, params, cache, tokens, pos):
         logits, cache = lm_decode_step(params, cache, tokens, pos, self.axes, self.cfg)

@@ -68,6 +68,7 @@ def test_tp_cross_entropy_matches_dense():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.models.common import Axes, tp_cross_entropy
+from repro.parallel.collectives import shard_map
 
 mesh = jax.make_mesh((4,), ("model",))
 V, B = 32, 8
@@ -79,7 +80,7 @@ def f(lg, lb):
     axes = Axes(tp="model", tp_size=4)
     return tp_cross_entropy(lg, lb, axes)
 
-sharded = jax.jit(jax.shard_map(f, mesh=mesh,
+sharded = jax.jit(shard_map(f, mesh=mesh,
     in_specs=(P(None, "model"), P()), out_specs=P(), check_vma=False))
 got = sharded(logits, labels)
 want = -jax.nn.log_softmax(logits)[jnp.arange(B), labels]
@@ -96,6 +97,7 @@ def test_pipeline_parallel_matches_sequential():
         """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.parallel.collectives import shard_map
 from repro.parallel.pp import pipeline_forward
 
 mesh = jax.make_mesh((4,), ("stage",))
@@ -114,7 +116,7 @@ for l in range(L):
 def staged(w_stage, xm):
     return pipeline_forward(layer, w_stage, xm, axis="stage", n_stages=4)
 
-out = jax.jit(jax.shard_map(staged, mesh=mesh,
+out = jax.jit(shard_map(staged, mesh=mesh,
     in_specs=(P("stage"), P()), out_specs=P("stage"), check_vma=False))(ws, x)
 # outputs are valid on the LAST stage only (GPipe drain) — compare its slice
 out = out.reshape(4, NM, MB, D)[3]
@@ -135,6 +137,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.models import attention as A
 from repro.models.common import Axes, plan_heads
+from repro.parallel.collectives import shard_map
 
 layout = plan_heads(4, 2, 8, 1)
 key = jax.random.PRNGKey(0)
@@ -155,7 +158,7 @@ def f(p, xx, pp, c):
     o, _ = A.attention_decode(p, xx, pp, c, axes, layout)
     return o
 spec_c = {"k": P(None, "data"), "v": P(None, "data"), "kv_pos": P(None, "data")}
-got = jax.jit(jax.shard_map(f, mesh=mesh,
+got = jax.jit(shard_map(f, mesh=mesh,
     in_specs=(P(), P(), P(), spec_c), out_specs=P(), check_vma=False))(
     params, x, pos, cache)
 np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4, atol=2e-5)

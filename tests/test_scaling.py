@@ -10,7 +10,8 @@ from repro.core.scaling import (
     AlphaLastStep,
     AlphaMovingAvg,
 )
-from repro.core.stats import DxStats, local_dx_stats
+from repro.core.stats import DxStats, local_dx_stats, scale_dx_stats
+from repro.optim import sgd
 
 
 def _dx(key, shapes):
@@ -79,6 +80,29 @@ def test_section42_bits_bound():
     assert maxint <= bound + 1e-5
     bits = 1 + np.log2(max(maxint, 1))
     assert bits <= 1 + np.log2(bound)
+
+
+def test_momentum_alpha_pinned():
+    """§4.1 momentum correction, regression-pinned by hand: with heavy-ball
+    μ the α rule must see the APPLIED update rescaled to gradient-equivalent
+    units, (1-μ)²||Δx||². For μ=0.9, β=0.9, one observed update with
+    ||Δx||²=2, d=100, n=4, η=0.5:
+
+        s  = (1-0.9)² · 2     = 0.02
+        r  = 0.9·0 + 0.1·s    = 0.002
+        α  = √100 / √(2·4·0.002/0.25 + (1e-8)²) = 10/√0.064 = 39.528471
+    """
+    opt = sgd(momentum=0.9)
+    assert abs(opt.dx_scale - 0.1) < 1e-12
+    rule = AlphaMovingAvg()  # β=0.9, ε=1e-8 (paper defaults)
+    dx = {"x": jnp.sqrt(jnp.full((1,), 2.0))}
+    stats = scale_dx_stats(local_dx_stats(dx), opt.dx_scale)
+    assert abs(float(stats.sq) - 0.02) < 1e-8
+    state = rule.update(rule.init(dx), stats)
+    alpha = float(rule.alpha(state, jnp.float32(0.5), 4, 100))
+    np.testing.assert_allclose(alpha, 39.528471, rtol=1e-5)
+    # momentum-free optimizers are untouched (dx_scale == 1)
+    assert sgd().dx_scale == 1.0
 
 
 def test_heuristic_alpha_no_overflow():
