@@ -12,8 +12,10 @@ from repro.core.compressor import (
     QSGD,
     SignSGD,
     TopK,
+    WireAggregate,
     aggregate_exact,
     make_compressor,
+    with_wire,
 )
 from repro.core.rounding import (
     decode,

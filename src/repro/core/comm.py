@@ -39,14 +39,37 @@ class CommCtx:
     def psum(self, x):
         return coll.psum_tree(x, self.axes)
 
+    def psum_wire(self, ints, wf):
+        """Codec-aware integer all-reduce: pack each leaf with the wire
+        format `wf`, sum the transport words across the data-parallel axes
+        (the ONLY thing that crosses the wire), and unpack back to the summed
+        integer image. Returns ``(words_sum, int_sum)`` — the fused update
+        route consumes the words directly, everything else the image."""
+        words = jax.tree.map(
+            lambda v: wf.pack(v, n_workers=self.n), ints
+        )
+        words_sum = coll.psum_wire_words(words, self.axes)
+        int_sum = jax.tree.map(
+            lambda w, v: wf.unpack(w, v.shape, n_summed=self.n),
+            words_sum,
+            ints,
+        )
+        return words_sum, int_sum
+
     def pmax(self, x):
         return coll.pmax_tree(x, self.axes)
 
     def pmax_global(self, x):
         """Max over workers AND TP shards (profiling reductions that must see
-        the entire model, e.g. Heuristic IntSGD's max_exp)."""
-        axes = self.axes + ((self.model_axis,) if self.model_axis else ())
-        return coll.pmax_tree(x, axes)
+        the entire model, e.g. Heuristic IntSGD's max_exp). When tp==1 the
+        layout folds the model axis into the data-parallel axes (remap_tp1),
+        so only append it when it is not already a worker axis."""
+        extra = (
+            (self.model_axis,)
+            if self.model_axis and self.model_axis not in self.axes
+            else ()
+        )
+        return coll.pmax_tree(x, self.axes + extra)
 
     def pmean(self, x):
         return coll.pmean_tree(x, self.axes, self.n)

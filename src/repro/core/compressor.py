@@ -30,6 +30,7 @@ aggregation (paper §4.1 "the first communication is exact") — drivers call
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, ClassVar, Tuple
 
@@ -37,9 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import rounding
 from repro.core.comm import CommCtx, fold_worker_key
 from repro.core.stats import DxStats, TreeDims, local_tree_dims
+from repro.wire import DenseInt, WireFormat, make_wire_format
 from repro.core.scaling import (
     AlphaBlockwise,
     AlphaDiana,
@@ -58,6 +59,42 @@ def _leaf_dims(params):
 def aggregate_exact(grads, ctx: CommCtx):
     """Full-precision mean over workers (step-0 / no-compression path)."""
     return ctx.pmean(grads)
+
+
+def _abs_max_f32(tree) -> jax.Array:
+    """max |leaf value| over a pytree, as f32 (wire-width metrics)."""
+    return jnp.max(
+        jnp.stack(
+            [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(tree)]
+        )
+    )
+
+
+def _leaf_keys(key, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(treedef, list(jax.random.split(key, len(leaves))))
+
+
+def _payload_bytes(wf: WireFormat, tree) -> float:
+    """Static per-worker collective payload under codec `wf` (exact bytes)."""
+    return float(sum(wf.wire_bytes(l.size) for l in jax.tree.leaves(tree)))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WireAggregate:
+    """What came back from the integer all-reduce.
+
+    ``words`` is the summed transport payload exactly as it crossed the
+    wire (packed int32 words / narrow lanes) — the fused Pallas update
+    consumes it directly. ``ints`` is the unpacked summed integer image
+    Σ_i Int(α g_i) (canonical int32) for decode, clipping and metrics; XLA
+    fuses its unpack into whatever reduction consumes it, so keeping both
+    views costs no extra HBM traffic on the fused route.
+    """
+
+    words: Any
+    ints: Any
 
 
 @jax.tree_util.register_dataclass
@@ -120,17 +157,30 @@ class NoCompression(Compressor):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class IntSGD(Compressor):
-    """Algorithm 1 (global α) / Algorithm 2 (blockwise α)."""
+    """Algorithm 1 (global α) / Algorithm 2 (blockwise α).
+
+    The transport representation is delegated to a :class:`WireFormat`
+    (``wire``); ``bits``/``use_kernels`` are the legacy shorthand for the
+    dense codec and are folded into the default ``DenseInt`` when no codec
+    is given explicitly.
+    """
 
     name: ClassVar[str] = "intsgd"
     alpha_rule: AlphaRule = AlphaMovingAvg()
     bits: int = 32
     stochastic: bool = True
-    use_kernels: bool = False  # route encode/decode through Pallas kernels
+    use_kernels: bool = False  # route encode/pack through Pallas kernels
+    wire: WireFormat | None = None
 
     @property
     def blockwise(self) -> bool:
         return isinstance(self.alpha_rule, AlphaBlockwise)
+
+    @property
+    def wire_format(self) -> WireFormat:
+        if self.wire is not None:
+            return self.wire
+        return DenseInt(bits=self.bits, use_kernels=self.use_kernels)
 
     def init(self, params):
         return self.alpha_rule.init(params)
@@ -151,57 +201,47 @@ class IntSGD(Compressor):
         return a
 
     def aggregate_wire(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
-        """Wire-level aggregation: returns the summed INTEGER payload and the
-        α tree *without* decoding. This is the entry point the fused
-        decode+update kernel routing (launch/step.py) builds on — the decode
-        1/(nα) is folded into the Pallas optimizer kernel instead of
-        materializing ĝ. ``aggregate`` is the decode-here wrapper."""
+        """Wire-level aggregation: returns the summed wire payload (packed
+        words + integer image, see :class:`WireAggregate`) and the α tree
+        *without* decoding. This is the entry point the fused decode+update
+        kernel routing (launch/step.py) builds on — the decode 1/(nα) is
+        folded into the Pallas optimizer kernel instead of materializing ĝ.
+        ``aggregate`` is the decode-here wrapper."""
         n = ctx.n
+        wf = self.wire_format
         alphas = self._alphas(state, grads, eta, n, dims)
-        wkey = fold_worker_key(key, ctx)
-        leaves, treedef = jax.tree.flatten(grads)
-        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
-
-        if self.use_kernels:
-            from repro.kernels import ops as kops
-
-            def enc(g, a, k):
-                return kops.int_compress(
-                    g, a, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
-                )
-
-        else:
-
-            def enc(g, a, k):
-                return rounding.encode(
-                    g, a, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
-                )
-
-        ints = jax.tree.map(enc, grads, alphas, akeys)
-        local_max = jnp.max(
-            jnp.stack(
-                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(ints)]
-            )
+        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
+        ints = jax.tree.map(
+            lambda g, a, k: wf.encode(
+                g, a, k, n_workers=n, stochastic=self.stochastic
+            ),
+            grads,
+            alphas,
+            akeys,
         )
-        max_local = jax.tree.map(lambda v: lax.pmax(v, ctx.axes), local_max)
-        # THE wire: integer all-reduce (psum of int32). On TPU this is the ICI
-        # collective carrying only integers — the paper's INA/all-reduce analog.
-        int_sum = ctx.psum(ints)
-        max_int = jnp.max(
-            jnp.stack(
-                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
-            )
-        )
+        max_local = lax.pmax(_abs_max_f32(ints), ctx.axes)
+        # THE wire: codec-packed integer all-reduce. On TPU this is the ICI
+        # collective carrying only integer transport words — the paper's
+        # INA/all-reduce analog, at bits/8 bytes per coordinate for the
+        # packed codec.
+        words_sum, int_sum = ctx.psum_wire(ints, wf)
+        max_int = _abs_max_f32(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
-        payload = (self.bits / 8.0) * tree_size(grads)
-        return int_sum, alphas, state, Metrics(max_int, bits, payload, max_local)
+        payload = _payload_bytes(wf, grads)
+        return (
+            WireAggregate(words=words_sum, ints=int_sum),
+            alphas,
+            state,
+            Metrics(max_int, bits, payload, max_local),
+        )
 
     def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
-        int_sum, alphas, state, metrics = self.aggregate_wire(
+        wa, alphas, state, metrics = self.aggregate_wire(
             state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
+        wf = self.wire_format
         ghat = jax.tree.map(
-            lambda s, a: rounding.decode(s, a, n_workers=ctx.n), int_sum, alphas
+            lambda s, a: wf.decode(s, a, n_workers=ctx.n), wa.ints, alphas
         )
         return ghat, state, metrics
 
@@ -214,12 +254,18 @@ class HeuristicIntSGD(Compressor):
     name: ClassVar[str] = "heuristic_intsgd"
     bits: int = 8
     stochastic: bool = False
+    wire: WireFormat | None = None
+
+    @property
+    def wire_format(self) -> WireFormat:
+        return self.wire if self.wire is not None else DenseInt(bits=self.bits)
 
     def init(self, params):
         return ()
 
     def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
         n = ctx.n
+        wf = self.wire_format
         rule = AlphaHeuristic(bits=self.bits)
         local_absmax = jnp.max(
             jnp.stack([jnp.max(jnp.abs(l)) for l in jax.tree.leaves(grads)])
@@ -228,25 +274,25 @@ class HeuristicIntSGD(Compressor):
         # this is exactly the overhead the paper's adaptive rule removes.
         global_absmax = ctx.pmax_global(local_absmax)
         alpha = rule.alpha_from_absmax(global_absmax, n)
-        wkey = fold_worker_key(key, ctx)
-        leaves, treedef = jax.tree.flatten(grads)
-        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
+        # The heuristic α bounds |αg| <= (2^(b-1)-1)/n, but rounding can
+        # nudge a coordinate one past that bound — and neither a packed
+        # field nor a narrow dense lane has any slack for the n-worker sum
+        # (4 workers at 32 when α said 31.75 wraps an int8 psum). So the
+        # hard §5.1 sum-clip applies on every codec; it only bites in the
+        # rounding-nudge case the α bound already aimed to exclude.
         ints = jax.tree.map(
-            lambda g, k: rounding.encode(
-                g, alpha, k, n_workers=1, bits=self.bits, stochastic=self.stochastic
+            lambda g, k: wf.encode(
+                g, alpha, k, n_workers=n, stochastic=self.stochastic
             ),
             grads,
             akeys,
         )
-        int_sum = ctx.psum(ints)
-        ghat = jax.tree.map(lambda s: rounding.decode(s, alpha, n_workers=n), int_sum)
-        max_int = jnp.max(
-            jnp.stack(
-                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
-            )
-        )
+        _, int_sum = ctx.psum_wire(ints, wf)
+        ghat = jax.tree.map(lambda s: wf.decode(s, alpha, n_workers=n), int_sum)
+        max_int = _abs_max_f32(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
-        return ghat, state, Metrics(max_int, bits, (self.bits / 8.0) * tree_size(grads))
+        return ghat, state, Metrics(max_int, bits, _payload_bytes(wf, grads))
 
 
 # --------------------------------------------------------------------------
@@ -254,31 +300,78 @@ class HeuristicIntSGD(Compressor):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class QSGD(Compressor):
+    """QSGD with an optional wire codec for the gathered integer payload.
+
+    With ``wire=None`` this is the paper-faithful transport: one int8 level
+    lane + one int8 sign lane per coordinate. With a codec, the signed level
+    v = sign·q ∈ [-levels, levels] rides the codec's transport words instead
+    (all-gather, so pack/unpack use n_workers=1 — no sum crosses the wire);
+    PackedInt(8) halves the gathered bytes vs the two-lane layout.
+    """
+
     name: ClassVar[str] = "qsgd"
     supports_allreduce: ClassVar[bool] = False
     levels: int = 64  # 6-bit, matching the paper's setup
+    wire: WireFormat | None = None
 
     def init(self, params):
         return ()
 
-    def _encode_leaf(self, g, key):
+    def _quantize_leaf(self, g, key):
         norm = jnp.linalg.norm(g.astype(jnp.float32).reshape(-1)) + 1e-30
         scaled = jnp.abs(g.astype(jnp.float32)) / norm * self.levels
         lo = jnp.floor(scaled)
         p = scaled - lo
         u = jax.random.uniform(key, g.shape, dtype=jnp.float32)
         q = lo + (u < p).astype(jnp.float32)
-        return (
-            q.astype(jnp.int8),
-            jnp.sign(g).astype(jnp.int8),
-            norm.astype(jnp.float32),
-        )
+        return q, norm.astype(jnp.float32)
+
+    def _encode_leaf(self, g, key):
+        q, norm = self._quantize_leaf(g, key)
+        return q.astype(jnp.int8), jnp.sign(g).astype(jnp.int8), norm
+
+    @property
+    def _bits_per_coord(self) -> float:
+        """Wire bits per coordinate: level field + sign."""
+        return 1.0 + math.ceil(math.log2(self.levels + 1))
 
     def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
-        wkey = fold_worker_key(key, ctx)
-        leaves, treedef = jax.tree.flatten(grads)
-        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
-        enc = jax.tree.map(self._encode_leaf, grads, akeys, is_leaf=lambda x: hasattr(x, "shape"))
+        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
+        is_shaped = lambda x: hasattr(x, "shape")
+        if self.wire is not None:
+            wf = self.wire
+            if wf.clip_limit(1) < self.levels:
+                raise ValueError(
+                    f"wire bits={wf.bits} too narrow for {self.levels} levels"
+                )
+
+            def enc(g, k):
+                q, norm = self._quantize_leaf(g, k)
+                v = (q * jnp.sign(g.astype(jnp.float32))).astype(jnp.int32)
+                return wf.pack(v, n_workers=1), norm
+
+            enc_tree = jax.tree.map(enc, grads, akeys, is_leaf=is_shaped)
+            gathered = ctx.all_gather(enc_tree)
+
+            def dec(leaf, g_like):
+                words, norm = leaf
+                vals = jax.vmap(
+                    lambda w: wf.unpack(w, g_like.shape, n_summed=1)
+                )(words).astype(jnp.float32)
+                vals = vals * (
+                    norm.reshape((-1,) + (1,) * g_like.ndim) / self.levels
+                )
+                return jnp.mean(vals, axis=0)
+
+            ghat = jax.tree.map(
+                dec, gathered, grads, is_leaf=lambda x: isinstance(x, tuple)
+            )
+            payload = _payload_bytes(wf, grads) + 4.0 * len(jax.tree.leaves(grads))
+            return ghat, state, Metrics(
+                jnp.zeros(()), jnp.full((), self._bits_per_coord), payload
+            )
+
+        enc = jax.tree.map(self._encode_leaf, grads, akeys, is_leaf=is_shaped)
         # all-gather of (levels, signs, norm): the expensive primitive
         gathered = ctx.all_gather(enc)
 
@@ -290,8 +383,11 @@ class QSGD(Compressor):
 
         ghat = jax.tree.map(dec, gathered, is_leaf=lambda x: isinstance(x, tuple))
         d = tree_size(grads)
-        payload = d * 1.25  # ~6 bits levels + 1 bit sign + norms, per worker
-        return ghat, state, Metrics(jnp.zeros(()), jnp.full((), 7.0), payload)
+        # entropy-coded estimate: level bits + sign bit + norms, per worker
+        payload = d * (self._bits_per_coord + 2.0) / 8.0
+        return ghat, state, Metrics(
+            jnp.zeros(()), jnp.full((), self._bits_per_coord), payload
+        )
 
 
 # --------------------------------------------------------------------------
@@ -527,6 +623,11 @@ class IntDIANA(Compressor):
     alpha_rule: AlphaRule = AlphaDiana()
     bits: int = 32
     stochastic: bool = True
+    wire: WireFormat | None = None
+
+    @property
+    def wire_format(self) -> WireFormat:
+        return self.wire if self.wire is not None else DenseInt(bits=self.bits)
 
     def init(self, params):
         zeros = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
@@ -541,57 +642,88 @@ class IntDIANA(Compressor):
 
     def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
         n = ctx.n
+        wf = self.wire_format
         d = dims.d if dims is not None else tree_size(grads)
         alpha = self.alpha_rule.alpha(state["alpha"], eta, n, d)
-        wkey = fold_worker_key(key, ctx)
-        leaves, treedef = jax.tree.flatten(grads)
-        akeys = jax.tree.unflatten(treedef, list(jax.random.split(wkey, len(leaves))))
+        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
         diff = jax.tree.map(lambda g, h: g.astype(jnp.float32) - h, grads, state["h_local"])
         ints = jax.tree.map(
-            lambda x, k: rounding.encode(
-                x, alpha, k, n_workers=n, bits=self.bits, stochastic=self.stochastic
+            lambda x, k: wf.encode(
+                x, alpha, k, n_workers=n, stochastic=self.stochastic
             ),
             diff,
             akeys,
         )
-        local_max = jnp.max(
-            jnp.stack(
-                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(ints)]
-            )
-        )
-        max_local = jax.tree.map(lambda v: lax.pmax(v, ctx.axes), local_max)
+        max_local = lax.pmax(_abs_max_f32(ints), ctx.axes)
         # local shift: h_i += Q(g_i - h_i) = (1/α) Int(α (g_i - h_i))
         q_local = jax.tree.map(lambda s: s.astype(jnp.float32) / alpha, ints)
         h_local = jax.tree.map(jnp.add, state["h_local"], q_local)
-        int_sum = ctx.psum(ints)
+        _, int_sum = ctx.psum_wire(ints, wf)
         mean_q = jax.tree.map(
-            lambda s: rounding.decode(s, alpha, n_workers=n), int_sum
+            lambda s: wf.decode(s, alpha, n_workers=n), int_sum
         )
         ghat = jax.tree.map(jnp.add, state["h_global"], mean_q)
         h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
-        max_int = jnp.max(
-            jnp.stack(
-                [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(int_sum)]
-            )
-        )
+        max_int = _abs_max_f32(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         new_state = dict(state, h_local=h_local, h_global=h_global)
         return ghat, new_state, Metrics(
-            max_int, bits, (self.bits / 8.0) * d, max_local
+            max_int, bits, _payload_bytes(wf, grads), max_local
         )
 
 
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
+def with_wire(comp: Compressor, wire) -> Compressor:
+    """Rebind a compressor to a wire codec (name string or WireFormat)."""
+    wire = make_wire_format(wire)
+    fields = {f.name for f in dataclasses.fields(comp)}
+    if "wire" not in fields:
+        raise ValueError(
+            f"compressor {comp.name!r} has no wire-codec seam (only the "
+            "integer-wire families are codec-configurable)"
+        )
+    if "bits" in fields and comp.bits != wire.bits:
+        # the codec's width wins in encode(); a silent mismatch would train
+        # a different recipe than the compressor name claims
+        raise ValueError(
+            f"wire codec is {wire.bits}-bit but compressor {comp.name!r} "
+            f"was built with bits={comp.bits}; construct them consistently "
+            f"(e.g. make_compressor('{comp.name}', bits={wire.bits}, "
+            f"wire=...))"
+        )
+    if "use_kernels" in fields and comp.use_kernels:
+        # keep the Pallas routing the compressor asked for: the kernel and
+        # jnp encode paths use different (equally valid) stochastic-rounding
+        # streams, so silently dropping the flag would change the trajectory
+        if dataclasses.is_dataclass(wire):
+            if not wire.use_kernels:
+                wire = dataclasses.replace(wire, use_kernels=True)
+        elif dataclasses.is_dataclass(getattr(wire, "inner", None)):
+            # metering wrapper (Logged): propagate into the wrapped codec so
+            # the instrumented run meters the SAME trajectory it wraps
+            if not wire.inner.use_kernels:
+                wire.inner = dataclasses.replace(
+                    wire.inner, use_kernels=True
+                )
+    return dataclasses.replace(comp, wire=wire)
+
+
 def make_compressor(name: str, **kw) -> Compressor:
+    from repro.wire import PackedInt
+
     reg = {
         "none": NoCompression,
         "allgather_sgd": partial(NoCompression, use_allgather=True),
         "intsgd": IntSGD,
         "intsgd_determ": partial(IntSGD, stochastic=False),
         "intsgd_block": partial(IntSGD, alpha_rule=AlphaBlockwise()),
+        "intsgd4": partial(IntSGD, bits=4),
         "intsgd8": partial(IntSGD, bits=8),
+        # bit-packed transport words instead of one lane per coordinate
+        "intsgd8_packed": partial(IntSGD, bits=8, wire=PackedInt(bits=8)),
+        "intsgd4_packed": partial(IntSGD, bits=4, wire=PackedInt(bits=4)),
         "heuristic_intsgd": HeuristicIntSGD,
         "qsgd": QSGD,
         "natsgd": NatSGD,
@@ -602,4 +734,8 @@ def make_compressor(name: str, **kw) -> Compressor:
     }
     if name not in reg:
         raise ValueError(f"unknown compressor {name!r}; options {sorted(reg)}")
+    if "wire" in kw and kw["wire"] is not None:
+        kw = dict(kw)
+        wire = kw.pop("wire")
+        return with_wire(reg[name](**kw), wire)  # bits-consistency checked
     return reg[name](**kw)

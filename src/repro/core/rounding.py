@@ -19,7 +19,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_INT_RANGE = {8: 127, 16: 32767, 32: 2147483647}
+# The §5.1 range/limit primitives are owned by the wire subsystem (they
+# define what the transport can carry); re-exported here for the scalar-lane
+# reference path and back-compat. repro.wire deliberately has no module-level
+# core imports, so this direction is cycle-free.
+from repro.wire.base import (  # noqa: F401  (re-exports)
+    _INT_RANGE,
+    WireRangeError,
+    clip_limit as _wire_clip_limit,
+)
 
 
 def stochastic_round(x: jax.Array, key: jax.Array) -> jax.Array:
@@ -49,16 +57,23 @@ def int_round(
     return deterministic_round(x)
 
 
+def clip_limit(*, n_workers: int, bits: int) -> int:
+    """The §5.1 clip limit: largest |v| such that the n-worker sum fits
+    `bits`. Raises :class:`WireRangeError` when the limit degenerates to 0
+    (the n-worker sum cannot be represented at all) instead of silently
+    zeroing every gradient coordinate. Canonical impl: repro.wire.base."""
+    return _wire_clip_limit(n_workers=n_workers, bits=bits)
+
+
 def clip_for_wire(ints: jax.Array, *, n_workers: int, bits: int) -> jax.Array:
     """Clip local integers so the n-worker sum fits the wire dtype (paper §5.1)."""
-    if bits not in _INT_RANGE:
-        raise ValueError(f"unsupported wire width {bits}")
-    lim = _INT_RANGE[bits] // max(n_workers, 1)
+    lim = clip_limit(n_workers=n_workers, bits=bits)
     return jnp.clip(ints, -lim, lim)
 
 
 def wire_dtype(bits: int):
-    return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+    """Narrowest native integer lane that holds one `bits`-wide value."""
+    return {4: jnp.int8, 8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
 
 
 def encode(
@@ -72,16 +87,16 @@ def encode(
 ) -> jax.Array:
     """x -> Int(α ∘ x), clipped to the wire range, in the wire integer dtype.
 
-    NOTE: aggregation must be performed in a dtype wide enough for the sum;
-    we always *transport* int32 on the TPU wire (psum) but value-range-clip to
-    the configured `bits` so the experiment semantics (int8 vs int32 runs of
-    the paper) are preserved.
+    Contract: the result is transported in the NARROWEST native lane that
+    holds one `bits`-wide value (int8 for bits<=8, int16, int32 — see
+    :func:`wire_dtype`), and the §5.1 clip guarantees the n-worker SUM still
+    fits `bits`, so an all-reduce of the returned array is overflow-safe in
+    its own lane dtype. This is the reference scalar-lane transport; the
+    bit-packed transport (sub-words coded into int32 lanes) lives in
+    :mod:`repro.wire` and shares this clip.
     """
     r = int_round(x.astype(jnp.float32) * alpha, key, stochastic=stochastic)
     r = clip_for_wire(r, n_workers=n_workers, bits=bits)
-    # transport in the narrow wire dtype: the clip above guarantees the
-    # n-worker SUM still fits `bits`, so the all-reduce itself runs in int8/
-    # int16 — this is where the 4x/2x communication win materializes.
     return r.astype(wire_dtype(bits))
 
 

@@ -10,6 +10,9 @@ crosses HBM once per stage:
                  replacing the naive dequant→wd→momentum→axpy chain that
                  would read/write HBM 9 times)
   block_norms    x -> per-block ||x_l||²                   (for blockwise α)
+  wire_pack      image <-> bit-packed int32 transport words (PackedInt wire;
+                 fused_unpack_update consumes the words directly so the
+                 unpacked image never touches HBM — see repro/wire/packed.py)
 
 Randomness is a counter-based hash PRNG (fmix32 finalizer) computed in plain
 jnp ops: identical bits under interpret=True (CPU validation) and Mosaic

@@ -20,7 +20,20 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.prng import uniform_from_counter
 
-_INT_LIM = {8: 127, 16: 32767, 32: 2147483647}
+_INT_LIM = {4: 7, 8: 127, 16: 32767, 32: 2147483647}
+
+
+def clip_limit(bits: int, n_workers: int) -> int:
+    """§5.1 clip limit as the kernels see it (single kernel-layer copy;
+    the wire layer raises its typed WireRangeError before reaching here)."""
+    lim = _INT_LIM[bits] // max(n_workers, 1)
+    if lim == 0:
+        raise ValueError(
+            f"int{bits} wire cannot carry a sum over {n_workers} workers "
+            "(clip limit degenerates to 0; widen the wire)"
+        )
+    return lim
+
 
 DEFAULT_BLOCK = (256, 1024)
 
@@ -65,7 +78,7 @@ def int_compress_2d(
     rows, cols = x.shape
     bm, bn = block
     assert rows % bm == 0 and cols % bn == 0, (x.shape, block)
-    lim = _INT_LIM[bits] // max(n_workers, 1)
+    lim = clip_limit(bits, n_workers)
     grid = (rows // bm, cols // bn)
     return pl.pallas_call(
         functools.partial(

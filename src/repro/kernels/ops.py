@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import block_norms as _bn
 from repro.kernels import fused_update as _fu
 from repro.kernels import int_compress as _ic
+from repro.kernels import wire_pack as _wp
 
 
 def _interpret_default() -> bool:
@@ -73,6 +74,123 @@ def int_compress(
         interpret=interpret,
     )
     return out.reshape(-1)[: x.size].reshape(shape)
+
+
+def _image_view(flat: jax.Array, k: int, m: int, block):
+    """(k·m,) chunk-major flat image -> (k, rows, bn) view aligned to the
+    word-block grid (words padded along the word axis only, so the canonical
+    word layout word[w] <- flat[j·m + w] is preserved)."""
+    bm, bn = block
+    chunk = bm * bn
+    mp = (m + chunk - 1) // chunk * chunk
+    ch = jnp.pad(flat.reshape(k, m), ((0, 0), (0, mp - m)))
+    return ch.reshape(k, mp // bn, bn)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n_workers", "interpret")
+)
+def pack_words(
+    ints: jax.Array,
+    *,
+    bits: int,
+    n_workers: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Bit-pack a clipped integer image into int32 transport words (flat,
+    length ceil(size / (32//bits))) — kernel-accelerated PackedInt.pack."""
+    interpret = _interpret_default() if interpret is None else interpret
+    k = 32 // bits
+    lim = _ic.clip_limit(bits, n_workers)
+    flat = ints.reshape(-1).astype(jnp.int32)
+    m = -(-flat.size // k)
+    flat = jnp.pad(flat, (0, k * m - flat.size))
+    block = _block_for(m)
+    x3 = _image_view(flat, k, m, block)
+    w2 = _wp.pack_words_2d(
+        x3, bits=bits, lim=lim, block=block, interpret=interpret
+    )
+    return w2.reshape(-1)[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("shape", "bits", "n_summed", "interpret")
+)
+def unpack_words(
+    words: jax.Array,
+    shape,
+    *,
+    bits: int,
+    n_summed: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Summed transport words -> summed integer image of `shape` (int32)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    k = 32 // bits
+    nlim = n_summed * _ic.clip_limit(bits, n_summed)
+    size = 1
+    for s in shape:
+        size *= int(s)
+    m = words.size
+    assert m == -(-size // k), (m, size, k)
+    block = _block_for(m)
+    w2 = _to_2d(words.reshape(-1), block)
+    out3 = _wp.unpack_words_2d(
+        w2, bits=bits, nlim=nlim, block=block, interpret=interpret
+    )
+    flat = out3.reshape(k, -1)[:, :m].reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n_summed", "interpret")
+)
+def fused_unpack_update(
+    words: jax.Array,
+    param: jax.Array,
+    mom: jax.Array,
+    inv_nalpha: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+    wd: jax.Array,
+    *,
+    bits: int,
+    n_summed: int,
+    interpret: bool | None = None,
+):
+    """PackedInt fused route: momentum-SGD step consuming the bit-packed
+    transport words directly (no unpacked integer image ever hits HBM)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    k = 32 // bits
+    nlim = n_summed * _ic.clip_limit(bits, n_summed)
+    shape, d = param.shape, param.size
+    m = words.size
+    assert m == -(-d // k), (m, d, k)
+    block = _block_for(m)
+    w2 = _to_2d(words.reshape(-1), block)
+
+    def view(t):
+        flat = t.reshape(-1).astype(jnp.float32)
+        return _image_view(jnp.pad(flat, (0, k * m - d)), k, m, block)
+
+    scalars = jnp.stack(
+        [
+            jnp.asarray(inv_nalpha, jnp.float32),
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(mu, jnp.float32),
+            jnp.asarray(wd, jnp.float32),
+        ]
+    )
+    po3, mo3 = _fu.fused_unpack_update_2d(
+        w2, view(param), view(mom), scalars,
+        bits=bits, nlim=nlim, block=block, interpret=interpret,
+    )
+
+    def unview(t, dt):
+        flat = t.reshape(k, -1)[:, :m].reshape(-1)[:d]
+        return flat.reshape(shape).astype(dt)
+
+    return unview(po3, param.dtype), unview(mo3, mom.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.prng import uniform_from_counter
 
-_INT_LIM = {8: 127, 16: 32767, 32: 2147483647}
+_INT_LIM = {4: 7, 8: 127, 16: 32767, 32: 2147483647}
 
 
 def int_compress_ref(
@@ -41,6 +41,68 @@ def int_compress_ref(
     lim = _INT_LIM[bits] // max(n_workers, 1)
     r = jnp.clip(r, -lim, lim)
     return r.astype(jnp.int32).reshape(orig_shape)
+
+
+def pack_words_ref(
+    ints: jnp.ndarray, *, bits: int, n_workers: int
+) -> jnp.ndarray:
+    """Canonical PackedInt word layout, computed in uint32 mul/add arithmetic
+    (deliberately NOT shifts, so the kernels are checked against an
+    independent formulation): word[w] = Σ_j (flat[j·m + w] + lim) · 2^(j·b)
+    mod 2^32, with m = ceil(size/k), k = 32//bits."""
+    k = 32 // bits
+    lim = _INT_LIM[bits] // max(n_workers, 1)
+    flat = ints.reshape(-1).astype(jnp.int32)
+    m = -(-flat.size // k)
+    chunks = jnp.pad(flat, (0, k * m - flat.size)).reshape(k, m)
+    word = jnp.zeros((m,), jnp.uint32)
+    for j in range(k):
+        word = word + (chunks[j] + lim).astype(jnp.uint32) * jnp.uint32(
+            2 ** (j * bits)
+        )
+    return word.astype(jnp.int32)
+
+
+def unpack_words_ref(
+    words: jnp.ndarray, shape, *, bits: int, n_summed: int
+) -> jnp.ndarray:
+    """Inverse of pack_words_ref after an n_summed-worker wrap-around sum:
+    field j = (word // 2^(j·b)) mod 2^b − n_summed·lim (uint32 div/mod)."""
+    k = 32 // bits
+    lim = _INT_LIM[bits] // max(n_summed, 1)
+    size = 1
+    for s in shape:
+        size *= int(s)
+    u = words.reshape(-1).astype(jnp.uint32)
+    fields = [
+        (u // jnp.uint32(2 ** (j * bits)) % jnp.uint32(2**bits)).astype(
+            jnp.int32
+        )
+        - n_summed * lim
+        for j in range(k)
+    ]
+    return jnp.stack(fields).reshape(-1)[:size].reshape(shape)
+
+
+def fused_unpack_update_ref(
+    words: jnp.ndarray,
+    param: jnp.ndarray,
+    mom: jnp.ndarray,
+    *,
+    bits: int,
+    n_summed: int,
+    inv_nalpha: jnp.ndarray,
+    lr: jnp.ndarray,
+    mu: jnp.ndarray,
+    wd: jnp.ndarray,
+):
+    """unpack_words_ref composed with fused_update_ref."""
+    int_sum = unpack_words_ref(
+        words, param.shape, bits=bits, n_summed=n_summed
+    )
+    return fused_update_ref(
+        int_sum, param, mom, inv_nalpha=inv_nalpha, lr=lr, mu=mu, wd=wd
+    )
 
 
 def fused_update_ref(

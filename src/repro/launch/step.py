@@ -8,14 +8,17 @@ style, replication checks disabled):
   * gradients of REPLICATED params psum'd over "model" (each TP member holds
     a partial contribution);
   * IntSGD (or any baseline compressor) aggregates gradients across the
-    data-parallel axes — for IntSGD the wire carries ONLY integers (psum of
-    int32), the paper's contract;
+    data-parallel axes — for the integer-wire families the psum carries ONLY
+    the wire codec's transport words (narrow lanes or bit-packed int32
+    words, selected via the compressor's ``wire`` field or the ``wire=``
+    argument here — see repro.wire), the paper's no-floats contract;
   * optimizer update, routed one of two ways:
       - "zero1": ZeRO-1 update on dp-sharded f32 masters, bf16 param
         all-gather (the default);
-      - "fused": the Pallas decode+SGD kernel (kernels/ops.fused_update) —
-        integer dequantization folded into the momentum-SGD update, one HBM
-        pass, params updated in place of a master copy.
+      - "fused": the Pallas decode+SGD kernel — integer dequantization
+        folded into the momentum-SGD update, one HBM pass, params updated in
+        place of a master copy; consumes the codec's transport words
+        directly (packed words are unpacked in-register, never in HBM).
 
 Every builder (train / init / serve / eval) resolves the SAME
 :class:`Layout` and terminates in the SAME ``collectives.sharded_jit``
@@ -37,7 +40,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.comm import CommCtx
-from repro.core.compressor import Compressor, IntSGD, aggregate_exact
+from repro.core.compressor import (
+    Compressor,
+    IntSGD,
+    aggregate_exact,
+    with_wire,
+)
 from repro.core.stats import DxStats, TreeDims, scale_dx_stats
 from repro.launch import specs as specs_mod
 from repro.models.common import Axes
@@ -324,14 +332,14 @@ def _make_train_body(
         eta = lr_schedule(step_idx)
         loss, grads = _forward_backward(layout, loss_fn, params, batch)
         cs = _unstack_comp(comp_state)
-        int_sum = alphas = None
+        wa = alphas = None
         if exact:
             ghat = aggregate_exact(grads, layout.ctx)
             metrics = (jnp.zeros(()), jnp.zeros(()))
         else:
             akey = jax.random.fold_in(key, 1)
             if update_route == "fused":
-                int_sum, alphas, cs, m = compressor.aggregate_wire(
+                wa, alphas, cs, m = compressor.aggregate_wire(
                     cs, grads, key=akey, eta=eta, ctx=layout.ctx,
                     dims=layout.dims,
                 )
@@ -349,7 +357,8 @@ def _make_train_body(
 
         if clip_norm is not None:
             scale = _clip_factor(
-                layout, clip_norm, ghat=ghat, int_sum=int_sum, alphas=alphas
+                layout, clip_norm, ghat=ghat,
+                int_sum=None if wa is None else wa.ints, alphas=alphas,
             )
             if ghat is not None:
                 ghat = jax.tree.map(lambda g: g * scale, ghat)
@@ -359,7 +368,8 @@ def _make_train_body(
         if update_route == "fused":
             new_params, new_opt = _fused_update_stage(
                 layout, params, opt_state, eta, mu, wd,
-                ghat=ghat, int_sum=int_sum, alphas=alphas,
+                ghat=ghat, wire_agg=wa, alphas=alphas,
+                wf=compressor.wire_format,
             )
         else:
             new_params, new_opt = zero1_update(
@@ -382,12 +392,15 @@ def _make_train_body(
 
 
 def _fused_update_stage(layout: Layout, params, opt_state, eta, mu, wd, *,
-                        ghat, int_sum, alphas):
+                        ghat, wire_agg, alphas, wf):
     """Pallas fused dequantize+momentum+SGD route: one HBM pass per leaf,
-    params updated directly (no ZeRO master shard). The exact (step-0) path
+    params updated directly (no ZeRO master shard). The update consumes the
+    summed TRANSPORT WORDS exactly as they left the all-reduce — for the
+    packed codec the integer image is never materialized; the kernel unpacks
+    fields in-register (wf.fused_update dispatch). The exact (step-0) path
     has no integer payload and runs the same arithmetic unfused."""
     mom = opt_state["mom"]
-    if int_sum is None:  # exact aggregation path
+    if wire_agg is None:  # exact aggregation path
         def leaf(p, m, g):
             p32 = p.astype(jnp.float32)
             g32 = g.astype(jnp.float32) + wd * p32
@@ -396,14 +409,14 @@ def _fused_update_stage(layout: Layout, params, opt_state, eta, mu, wd, *,
 
         outs = jax.tree.map(leaf, params, mom, ghat)
     else:
-        from repro.kernels import ops as kops
+        n = layout.ctx.n
 
-        def leaf(p, m, s, a):
-            return kops.fused_update(
-                s, p, m, 1.0 / (layout.ctx.n * a), eta, mu, wd
+        def leaf(p, m, w, a):
+            return wf.fused_update(
+                w, p, m, 1.0 / (n * a), eta, mu, wd, n_summed=n
             )
 
-        outs = jax.tree.map(leaf, params, mom, int_sum, alphas)
+        outs = jax.tree.map(leaf, params, mom, wire_agg.words, alphas)
     is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
     new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=is_pair)
     new_mom = jax.tree.map(lambda o: o[1], outs, is_leaf=is_pair)
@@ -427,9 +440,14 @@ def build_train_step(
     tp_override: Optional[int] = None,
     fused: bool = False,
     clip_norm: Optional[float] = None,
+    wire=None,
 ) -> StepArtifacts:
     from repro.launch.inputs import input_specs
 
+    if wire is not None:
+        # config-level codec selection: rebind the compressor's transport
+        # (accepts a repro.wire registry name or a WireFormat instance)
+        compressor = with_wire(compressor, wire)
     layout = resolve_layout(
         cfg, mesh, param_dtype=param_dtype, tp_override=tp_override,
         remap_tp1=True,

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointStore
 from repro.configs import ShapeConfig, get_arch, smoke_config
-from repro.core import make_compressor
+from repro.core import make_compressor, with_wire
 from repro.data.synthetic import SyntheticLMData
 from repro.launch.step import build_init_state, build_train_step
 from repro.models.transformer import init_lm_params
@@ -43,8 +43,11 @@ def train_loop(
     seed: int = 0,
     fused: bool = False,
     clip_norm: float | None = 1.0,
+    wire: str | None = None,
 ):
     comp = make_compressor(compressor)
+    if wire is not None:
+        comp = with_wire(comp, wire)
     opt = sgd(momentum=0.9, weight_decay=1e-4)
     sched = warmup_wrap(constant(lr), 5)
     art = build_train_step(
@@ -110,6 +113,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--compressor", default="intsgd")
+    ap.add_argument("--wire", default=None,
+                    help="wire codec for the integer gradient transport "
+                         "(dense8/dense16/dense32/packed4/packed8/packed16)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--data", type=int, default=1)
@@ -130,7 +136,7 @@ def main():
         cfg, mesh, shape,
         compressor=args.compressor, steps=args.steps, lr=args.lr,
         ckpt=ckpt, resume=args.resume, fused=args.fused,
-        clip_norm=args.clip_norm,
+        clip_norm=args.clip_norm, wire=args.wire,
     )
 
 

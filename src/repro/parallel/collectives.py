@@ -144,6 +144,28 @@ def psum_tree(x, axes):
     return jax.tree.map(lambda v: lax.psum(v, axes), x)
 
 
+def psum_wire_words(words, axes):
+    """The packed-word integer all-reduce — THE floatless-wire primitive.
+
+    Every wire-codec transport (dense lanes, bit-packed int32 words) sums
+    its payload through here; the dtype guard makes the paper's no-floats
+    contract structural: a float leaf on the gradient wire is a bug, not a
+    silent fallback. Wrap-around integer addition is exactly what the
+    packed-field arithmetic needs (see repro/wire/packed.py).
+    """
+
+    def _one(v):
+        if not jnp.issubdtype(v.dtype, jnp.integer):
+            raise TypeError(
+                f"wire payload must be integer, got {v.dtype} — the IntSGD "
+                "wire carries no floats (route float reductions through "
+                "psum_tree instead)"
+            )
+        return lax.psum(v, axes)
+
+    return jax.tree.map(_one, words)
+
+
 def pmax_tree(x, axes):
     return jax.tree.map(lambda v: lax.pmax(v, axes), x)
 

@@ -61,6 +61,25 @@ class ServeEngine:
         nxt = tp_greedy(logits, self.axes)
         return nxt, cache
 
+    def apply_wire_delta(self, words, alphas, wf, *, n_summed: int = 1):
+        """Train→serve weight refresh over the integer wire.
+
+        A trainer pushes a parameter delta as codec transport words
+        (``wf.pack(wf.encode(Δx, α))`` per leaf — bits/8 bytes per
+        coordinate for the packed codec instead of 4-byte floats); the
+        serving replica decodes and applies it in place without ever
+        receiving a float tensor. ``alphas`` is a pytree matching ``words``
+        (or reusable scalars per leaf); ``n_summed`` is the number of summed
+        payloads when the delta itself came off an all-reduce.
+        """
+
+        def leaf(p, w, a):
+            ints = wf.unpack(w, p.shape, n_summed=n_summed)
+            delta = wf.decode(ints, a, n_workers=n_summed)
+            return (p.astype(jnp.float32) + delta).astype(p.dtype)
+
+        self.params = jax.tree.map(leaf, self.params, words, alphas)
+
     def submit(self, req: Request):
         self.pending.append(req)
 

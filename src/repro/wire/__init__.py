@@ -1,0 +1,46 @@
+"""Pluggable wire-codec subsystem: everything between rounded integers and
+the psum. See :mod:`repro.wire.base` for the WireFormat contract.
+
+Registry names accepted everywhere a codec can be configured
+(``make_compressor(..., wire=...)``, ``build_train_step(..., wire=...)``,
+``repro.launch.train --wire``):
+
+    dense4 / dense8 / dense16 / dense32 — one native lane per coordinate
+    packed4 / packed8 / packed16        — bit-packed int32 transport words
+    logged:<name>                       — byte-metering wrapper around <name>
+"""
+from __future__ import annotations
+
+from repro.wire.base import WireFormat, WireRangeError
+from repro.wire.dense import DenseInt
+from repro.wire.logged import Logged
+from repro.wire.packed import PackedInt
+
+__all__ = [
+    "WireFormat",
+    "WireRangeError",
+    "DenseInt",
+    "PackedInt",
+    "Logged",
+    "make_wire_format",
+]
+
+
+def make_wire_format(name):
+    """Resolve a codec spec (name string or WireFormat instance)."""
+    if not isinstance(name, str):
+        return name  # already a codec
+    if name.startswith("logged:"):
+        return Logged(make_wire_format(name[len("logged:"):]))
+    reg = {
+        "dense4": lambda: DenseInt(bits=4),
+        "dense8": lambda: DenseInt(bits=8),
+        "dense16": lambda: DenseInt(bits=16),
+        "dense32": lambda: DenseInt(bits=32),
+        "packed4": lambda: PackedInt(bits=4),
+        "packed8": lambda: PackedInt(bits=8),
+        "packed16": lambda: PackedInt(bits=16),
+    }
+    if name not in reg:
+        raise ValueError(f"unknown wire format {name!r}; options {sorted(reg)}")
+    return reg[name]()

@@ -1,0 +1,150 @@
+"""WireFormat — the pluggable codec between "rounded integers" and psum.
+
+The paper's headline property is a wire that carries *no floats*. Everything
+that happens between a worker's float gradient and the all-reduced integer
+image is the wire codec's business, split into four orthogonal stages::
+
+    encode : f32 tensor, α, key  ->  clipped integer image (canonical int32)
+    pack   : integer image       ->  transport words (what the psum carries)
+    unpack : summed words        ->  summed integer image (int32)
+    decode : summed image, α     ->  gradient estimate (1/(nα)) Σ Int(α g_i)
+
+Psum-safety contract (every implementation MUST satisfy it)::
+
+    unpack(Σ_i pack(ints_i), n) == Σ_i ints_i     elementwise, exactly,
+
+for any n tensors whose entries respect the §5.1 clip |v| <= clip_limit(n).
+The Σ on the left is the wire all-reduce in the transport-word dtype
+(wrap-around integer addition); the Σ on the right is the mathematical sum.
+This is what lets compressors reason about integer sums while the transport
+representation stays swappable (dense lanes today, bit-packed words, future
+entropy-coded or double-buffered wires).
+
+Call sites select a codec through the compressor's ``wire`` field (or the
+``wire=`` argument of ``launch.step.build_train_step``); new transports
+extend :mod:`repro.wire`, not the call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# NOTE: no module-level repro.core imports here (or anywhere in repro.wire):
+# core/compressor.py imports this package, so the wire package must be
+# importable standalone; the Int-operator primitives are pulled lazily.
+
+__all__ = ["WireFormat", "WireRangeError", "clip_limit"]
+
+_INT_RANGE = {4: 7, 8: 127, 16: 32767, 32: 2147483647}
+
+
+class WireRangeError(ValueError):
+    """The wire configuration cannot represent the n-worker sum.
+
+    Raised when the §5.1 clip limit ``(2^(b-1)-1) // n_workers`` degenerates
+    to 0 — every local integer would be clipped to 0 and the whole gradient
+    silently zeroed (e.g. 256 workers on an int8 wire). The fix is a wider
+    wire (`bits`) or fewer workers per integer all-reduce group.
+    """
+
+
+def clip_limit(*, n_workers: int, bits: int) -> int:
+    """The §5.1 clip limit: largest |v| such that the n-worker sum fits
+    `bits`. Raises :class:`WireRangeError` on the degenerate range."""
+    if bits not in _INT_RANGE:
+        raise ValueError(f"unsupported wire width {bits}")
+    lim = _INT_RANGE[bits] // max(n_workers, 1)
+    if lim == 0:
+        raise WireRangeError(
+            f"int{bits} wire cannot carry a sum over {n_workers} workers: "
+            f"clip limit (2^{bits - 1}-1)//{n_workers} == 0 would zero every "
+            f"gradient. Use a wider wire (bits>={bits * 2}) or fewer workers "
+            f"per integer all-reduce group."
+        )
+    return lim
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Base codec: shared encode/decode; transport stages are per-format.
+
+    ``bits`` is the VALUE width: the §5.1 clip guarantees the n-worker sum of
+    any coordinate fits a signed `bits`-wide field. How those fields ride the
+    physical lanes (one narrow lane each, or several packed into an int32
+    word) is what subclasses define via pack/unpack.
+    """
+
+    name: ClassVar[str] = "base"
+
+    bits: int = 32
+    use_kernels: bool = False  # route hot stages through the Pallas kernels
+
+    # ---- shared value stages -------------------------------------------
+    def clip_limit(self, n_workers: int) -> int:
+        """§5.1 limit; raises WireRangeError when it degenerates to 0."""
+        return clip_limit(n_workers=n_workers, bits=self.bits)
+
+    def encode(
+        self,
+        x: jax.Array,
+        alpha: jax.Array,
+        key: jax.Array | None,
+        *,
+        n_workers: int,
+        stochastic: bool = True,
+    ) -> jax.Array:
+        """x -> Int(α ∘ x) clipped for the n-worker sum, canonical int32."""
+        lim = self.clip_limit(n_workers)
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            return kops.int_compress(
+                x, alpha, key, n_workers=n_workers, bits=self.bits,
+                stochastic=stochastic,
+            )
+        from repro.core import rounding  # lazy: core imports this package
+
+        r = rounding.int_round(
+            x.astype(jnp.float32) * alpha, key, stochastic=stochastic
+        )
+        return jnp.clip(r, -lim, lim).astype(jnp.int32)
+
+    def decode(
+        self, ints: jax.Array, alpha: jax.Array, *, n_workers: int
+    ) -> jax.Array:
+        """Summed integer image -> gradient estimate (1/(nα)) Σ Int(α g_i)."""
+        return ints.astype(jnp.float32) / (n_workers * alpha)
+
+    # ---- transport stages (per-format) ---------------------------------
+    def pack(self, ints: jax.Array, *, n_workers: int) -> jax.Array:
+        raise NotImplementedError
+
+    def unpack(
+        self, words: jax.Array, shape: Tuple[int, ...], *, n_summed: int
+    ) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bytes(self, size: int) -> int:
+        """Exact bytes one worker's `size`-coordinate payload puts on the
+        collective (the quantity bench_comm_volume meters)."""
+        raise NotImplementedError
+
+    def fused_update(
+        self,
+        words: jax.Array,
+        param: jax.Array,
+        mom: jax.Array,
+        inv_nalpha: Any,
+        lr: Any,
+        mu: Any,
+        wd: Any,
+        *,
+        n_summed: int,
+    ):
+        """Fused decode + momentum-SGD straight off the transport words (the
+        Pallas route): returns (new_param, new_mom) without materializing the
+        unpacked integer image in HBM."""
+        raise NotImplementedError

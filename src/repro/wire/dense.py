@@ -1,0 +1,48 @@
+"""DenseInt — one native integer lane per coordinate (the PR-1 transport).
+
+pack is a cast to the narrowest native lane holding one `bits`-wide value
+(int8 for bits<=8, int16, int32); the §5.1 clip makes the all-reduce
+overflow-safe in that lane dtype, so unpack is just the widening cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire.base import WireFormat
+
+# narrowest native lane holding one `bits`-wide value (mirrors
+# repro.core.rounding.wire_dtype; kept local so repro.wire imports
+# standalone — core/compressor.py imports this package)
+_LANE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseInt(WireFormat):
+    name: ClassVar[str] = "dense"
+
+    @property
+    def lane_dtype(self):
+        return _LANE[self.bits]
+
+    def pack(self, ints: jax.Array, *, n_workers: int) -> jax.Array:
+        # the clip in encode() already guarantees the n-worker sum fits the
+        # lane, so the narrowing cast is exact.
+        return ints.astype(self.lane_dtype)
+
+    def unpack(
+        self, words: jax.Array, shape: Tuple[int, ...], *, n_summed: int
+    ) -> jax.Array:
+        return words.astype(jnp.int32)
+
+    def wire_bytes(self, size: int) -> int:
+        return int(size) * jnp.dtype(self.lane_dtype).itemsize
+
+    def fused_update(self, words, param, mom, inv_nalpha, lr, mu, wd, *,
+                     n_summed: int):
+        from repro.kernels import ops as kops
+
+        return kops.fused_update(words, param, mom, inv_nalpha, lr, mu, wd)

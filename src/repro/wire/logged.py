@@ -1,0 +1,77 @@
+"""Logged — transparent wrapper metering exact collective bytes.
+
+Wraps any WireFormat and counts, at trace time, the exact transport-word
+bytes every pack/unpack call would put on (take off) the collective, plus
+call counts per leaf shape. Because compressors treat the codec as static
+Python state closed over by the step, one traced step records one step's
+exact wire traffic — which is precisely what the comm-volume benchmarks
+need, with no device work added (values pass through untouched).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Tuple
+
+import jax
+
+from repro.wire.base import WireFormat
+
+
+class Logged:
+    """Byte-metering decorator over a WireFormat (same duck type)."""
+
+    name = "logged"
+
+    def __init__(self, inner: WireFormat):
+        self.inner = inner
+        self.reset()
+
+    # ---- meter ----------------------------------------------------------
+    def reset(self):
+        self.pack_bytes = 0
+        self.unpack_bytes = 0
+        self.calls = defaultdict(int)  # (stage, shape) -> count
+
+    def report(self) -> dict:
+        return {
+            "codec": f"logged({self.inner.name}{self.inner.bits})",
+            "pack_bytes": self.pack_bytes,
+            "unpack_bytes": self.unpack_bytes,
+            "calls": dict(self.calls),
+        }
+
+    # ---- delegation -----------------------------------------------------
+    @property
+    def bits(self) -> int:
+        return self.inner.bits
+
+    def clip_limit(self, n_workers: int) -> int:
+        return self.inner.clip_limit(n_workers)
+
+    def encode(self, x, alpha, key, *, n_workers, stochastic=True):
+        return self.inner.encode(
+            x, alpha, key, n_workers=n_workers, stochastic=stochastic
+        )
+
+    def decode(self, ints, alpha, *, n_workers):
+        return self.inner.decode(ints, alpha, n_workers=n_workers)
+
+    def pack(self, ints: jax.Array, *, n_workers: int) -> jax.Array:
+        words = self.inner.pack(ints, n_workers=n_workers)
+        self.pack_bytes += words.size * words.dtype.itemsize
+        self.calls[("pack", tuple(ints.shape))] += 1
+        return words
+
+    def unpack(self, words: jax.Array, shape: Tuple[int, ...], *, n_summed: int):
+        self.unpack_bytes += words.size * words.dtype.itemsize
+        self.calls[("unpack", tuple(shape))] += 1
+        return self.inner.unpack(words, shape, n_summed=n_summed)
+
+    def wire_bytes(self, size: int) -> int:
+        return self.inner.wire_bytes(size)
+
+    def fused_update(self, words, param, mom, inv_nalpha, lr, mu, wd, *,
+                     n_summed: int):
+        return self.inner.fused_update(
+            words, param, mom, inv_nalpha, lr, mu, wd, n_summed=n_summed
+        )

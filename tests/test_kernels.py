@@ -51,6 +51,65 @@ def test_int_compress_unbiased_statistics():
     assert abs(err) < 1e-3
 
 
+@pytest.mark.parametrize("shape", [(7,), (128,), (300, 700), (3, 5, 7)])
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_pack_words_matches_oracle(shape, bits):
+    """Pallas pack kernel vs the independent uint32-mul oracle, bit-exact."""
+    key = jax.random.PRNGKey(hash((shape, bits)) % 2**31)
+    lim = ref._INT_LIM[bits] // 4
+    ints = jax.random.randint(key, shape, -lim, lim + 1)
+    got = ops.pack_words(ints, bits=bits, n_workers=4)
+    want = ref.pack_words_ref(ints, bits=bits, n_workers=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(7,), (1000,), (33, 9)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_unpack_words_matches_oracle_after_sum(shape, bits):
+    """Unpack kernel inverts a 4-worker wrap-around word sum, bit-exact."""
+    n = 4
+    key = jax.random.PRNGKey(hash((shape, bits)) % 2**31)
+    lim = ref._INT_LIM[bits] // n
+    size = int(np.prod(shape))
+    ints = jax.random.randint(key, (n, size), -lim, lim + 1)
+    wsum = sum(
+        ops.pack_words(ints[i].reshape(shape), bits=bits, n_workers=n)
+        for i in range(n)
+    )
+    got = ops.unpack_words(wsum, shape, bits=bits, n_summed=n)
+    want = ref.unpack_words_ref(wsum, shape, bits=bits, n_summed=n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.sum(ints, axis=0).reshape(shape))
+    )
+
+
+@pytest.mark.parametrize("shape", [(64,), (513, 300)])
+def test_fused_unpack_update_matches_oracle(shape):
+    """The packed-wire fused kernel == unpack + fused-update composition."""
+    n, bits = 4, 8
+    key = jax.random.PRNGKey(11)
+    lim = ref._INT_LIM[bits] // n
+    size = int(np.prod(shape))
+    ints = jax.random.randint(key, (n, size), -lim, lim + 1)
+    wsum = sum(
+        ops.pack_words(ints[i].reshape(shape), bits=bits, n_workers=n)
+        for i in range(n)
+    )
+    p = jax.random.normal(key, shape)
+    m = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    got_p, got_m = ops.fused_unpack_update(
+        wsum, p, m, 1e-3, 0.1, 0.9, 1e-4, bits=bits, n_summed=n
+    )
+    want_p, want_m = ref.fused_unpack_update_ref(
+        wsum, p, m, bits=bits, n_summed=n,
+        inv_nalpha=jnp.float32(1e-3), lr=jnp.float32(0.1),
+        mu=jnp.float32(0.9), wd=jnp.float32(1e-4),
+    )
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("shape", [(64,), (513, 300), (4, 4, 4)])
 def test_fused_update_matches_oracle(shape):
     key = jax.random.PRNGKey(1)

@@ -19,13 +19,14 @@ def mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def _run_steps(cfg, mesh, shape, *, fused, steps=4):
-    comp = make_compressor("intsgd")
+def _run_steps(cfg, mesh, shape, *, fused, steps=4, compressor="intsgd",
+               wire=None):
+    comp = make_compressor(compressor)
     opt = sgd(momentum=0.9, weight_decay=1e-4)
     art = build_train_step(
         cfg, mesh, shape, compressor=comp, base_opt=opt,
         lr_schedule=constant(0.2), param_dtype=jnp.float32,
-        fused=fused, donate=False,
+        fused=fused, donate=False, wire=wire,
     )
     key = jax.random.PRNGKey(0)
     params = init_lm_params(key, cfg, tp=1, n_shards=1, dtype=jnp.float32)
@@ -59,6 +60,28 @@ def test_fused_route_matches_unfused(mesh):
     p_fus, l_fus = _run_steps(cfg, mesh, shape, fused=True)
     np.testing.assert_allclose(np.asarray(l_fus), np.asarray(l_ref), rtol=1e-6)
     for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_fus)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6
+        )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fused", [False, True])
+def test_packed_wire_matches_dense_route(mesh, fused):
+    """build_train_step over the PackedInt wire must match the DenseInt
+    route step-for-step (both routes, same integer image — only the
+    transport words differ). The 4-device-mesh version of this parity lives
+    in test_distributed.py::test_packed_wire_parity_on_mesh."""
+    cfg = smoke_config(get_arch("xlstm-125m"))
+    shape = ShapeConfig("t", 32, 4, "train")
+    p_d, l_d = _run_steps(
+        cfg, mesh, shape, fused=fused, compressor="intsgd8", wire="dense8"
+    )
+    p_p, l_p = _run_steps(
+        cfg, mesh, shape, fused=fused, compressor="intsgd8", wire="packed8"
+    )
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_d), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_d), jax.tree.leaves(p_p)):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6
         )

@@ -1,0 +1,287 @@
+"""The wire-codec subsystem: pack/unpack round-trips, the psum-safety
+contract (psum-over-packed-words == pack-of-summed-ints under the §5.1
+clip), codec-parity of the compressors, and the degenerate-range guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_compressor
+from repro.core.comm import CommCtx
+from repro.core.rounding import WireRangeError, clip_for_wire, clip_limit
+from repro.parallel import collectives as coll
+from repro.wire import DenseInt, Logged, PackedInt, make_wire_format
+
+N = 4
+AXIS = "workers"
+CTX = CommCtx(axes=(AXIS,), axis_sizes=(N,))
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip, example-based tests still run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip and sum-safety (hypothesis: all widths × odd shapes
+# × negative values)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @given(
+        bits=st.sampled_from([4, 8, 16]),
+        n=st.integers(1, 6),
+        size=st.integers(1, 700),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_pack_unpack_roundtrip(bits, n, size, seed):
+        """unpack(pack(v), n_summed=1 payload) recovers v exactly for any
+        clipped integer image — including odd sizes that pad the last word
+        and values at the negative clip boundary."""
+        wf = PackedInt(bits=bits)
+        lim = wf.clip_limit(n)
+        ints = jax.random.randint(
+            jax.random.PRNGKey(seed), (size,), -lim, lim + 1
+        )
+        words = wf.pack(ints, n_workers=n)
+        assert words.dtype == jnp.int32
+        assert words.size == -(-size // (32 // bits))
+        # a single packed payload is "a sum over n where n-1 workers sent 0"
+        zeros = wf.pack(jnp.zeros((size,), jnp.int32), n_workers=n)
+        total = words + (n - 1) * zeros
+        back = wf.unpack(total, (size,), n_summed=n)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(ints))
+
+    @given(
+        bits=st.sampled_from([4, 8, 16]),
+        n=st.integers(2, 6),
+        size=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_packed_sum_safety(bits, n, size, seed):
+        """THE psum-safety contract: the wrap-around int32 sum of n packed
+        payloads unpacks to the elementwise sum of the n integer images, for
+        any values under the §5.1 clip (worst case: all workers at ±lim)."""
+        wf = PackedInt(bits=bits)
+        lim = wf.clip_limit(n)
+        key = jax.random.PRNGKey(seed)
+        ints = jax.random.randint(key, (n, size), -lim, lim + 1)
+        # adversarial rows: saturate the clip in both directions
+        ints = ints.at[0].set(lim).at[-1].set(-lim)
+        words = jnp.stack([wf.pack(ints[i], n_workers=n) for i in range(n)])
+        wsum = jnp.sum(words, axis=0)  # int32 wrap-around, like the psum
+        got = wf.unpack(wsum, (size,), n_summed=n)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(jnp.sum(ints, axis=0))
+        )
+
+
+def test_packed_sum_safety_through_real_psum():
+    """Same contract through the actual collective: vmap(axis_name) psum of
+    packed words == pack of summed ints (the simulation lowers the identical
+    lax.psum the mesh wire uses)."""
+    wf = PackedInt(bits=8)
+    lim = wf.clip_limit(N)
+    ints = jax.random.randint(jax.random.PRNGKey(3), (N, 1003), -lim, lim + 1)
+
+    def worker(v):
+        words = wf.pack(v, n_workers=N)
+        wsum = coll.psum_tree(words, (AXIS,))
+        return wf.unpack(wsum, (v.shape[-1],), n_summed=N)
+
+    got = coll.vmap_workers(worker, in_axes=0)(ints)
+    want = jnp.sum(ints, axis=0)
+    for i in range(N):
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+
+
+def test_packed_encode_identical_to_dense():
+    """PackedInt and DenseInt share the §5.1 clip: the integer image is
+    bit-identical, only the transport differs — the invariant behind the
+    step-for-step ULP parity of the two routes."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (513,)) * 3.0
+    for bits in (4, 8, 16):
+        d = DenseInt(bits=bits).encode(
+            x, jnp.float32(9.7), key, n_workers=N
+        )
+        p = PackedInt(bits=bits).encode(
+            x, jnp.float32(9.7), key, n_workers=N
+        )
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(p))
+
+
+def test_dense_pack_is_exact_narrowing():
+    wf = DenseInt(bits=8)
+    ints = jnp.arange(-31, 32, dtype=jnp.int32)
+    words = wf.pack(ints, n_workers=N)
+    assert words.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(wf.unpack(words, ints.shape, n_summed=N)), np.asarray(ints)
+    )
+
+
+def test_kernel_pack_matches_jnp_pack():
+    """use_kernels routes pack/unpack through the Pallas kernels with the
+    identical canonical word layout."""
+    for bits in (4, 8, 16):
+        ref_wf = PackedInt(bits=bits)
+        ker_wf = PackedInt(bits=bits, use_kernels=True)
+        lim = ref_wf.clip_limit(N)
+        ints = jax.random.randint(
+            jax.random.PRNGKey(bits), (777,), -lim, lim + 1
+        )
+        w_ref = ref_wf.pack(ints, n_workers=N)
+        w_ker = ker_wf.pack(ints, n_workers=N)
+        np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_ker))
+        zeros = ref_wf.pack(jnp.zeros_like(ints), n_workers=N)
+        total = w_ref + (N - 1) * zeros
+        np.testing.assert_array_equal(
+            np.asarray(ref_wf.unpack(total, (777,), n_summed=N)),
+            np.asarray(ker_wf.unpack(total, (777,), n_summed=N)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# degenerate §5.1 range (regression: silently zeroed gradients)
+# ---------------------------------------------------------------------------
+def test_clip_for_wire_degenerate_range_raises():
+    """256 workers on an int8 wire: the old code clipped every integer to 0
+    (lim = 127//256 == 0), silently zeroing the gradient. Now it's an error
+    naming the fix."""
+    with pytest.raises(WireRangeError, match="widen|wider"):
+        clip_for_wire(jnp.ones((4,)), n_workers=256, bits=8)
+    with pytest.raises(WireRangeError):
+        clip_limit(n_workers=128, bits=8)
+    # the codec surfaces the same guard at trace/build time
+    with pytest.raises(WireRangeError):
+        PackedInt(bits=4).clip_limit(8)
+    with pytest.raises(WireRangeError):
+        DenseInt(bits=8).encode(
+            jnp.ones((4,)), jnp.float32(1.0), jax.random.PRNGKey(0),
+            n_workers=256,
+        )
+    # non-degenerate boundary still fine: 127 workers -> lim 1
+    assert clip_limit(n_workers=127, bits=8) == 1
+
+
+def test_int32_wire_still_wide_enough_for_big_fleets():
+    assert clip_limit(n_workers=4096, bits=32) >= 2**18
+
+
+# ---------------------------------------------------------------------------
+# codec plumbing
+# ---------------------------------------------------------------------------
+def test_make_wire_format_registry():
+    assert isinstance(make_wire_format("dense8"), DenseInt)
+    assert isinstance(make_wire_format("packed4"), PackedInt)
+    lg = make_wire_format("logged:packed8")
+    assert isinstance(lg, Logged) and isinstance(lg.inner, PackedInt)
+    wf = PackedInt(bits=16)
+    assert make_wire_format(wf) is wf
+    with pytest.raises(ValueError, match="unknown wire format"):
+        make_wire_format("packed3")
+    with pytest.raises(ValueError, match="bits"):
+        PackedInt(bits=5)
+
+
+def test_psum_wire_words_rejects_floats():
+    """The floatless-wire contract is structural: a float leaf on the
+    gradient wire is a TypeError, not a silent fallback."""
+    def body(v):
+        return coll.psum_wire_words(v, (AXIS,))
+
+    with pytest.raises(TypeError, match="integer"):
+        coll.vmap_workers(body, in_axes=0)(jnp.ones((N, 8), jnp.float32))
+    out = coll.vmap_workers(body, in_axes=0)(jnp.ones((N, 8), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.full((8,), N))
+
+
+def test_logged_wrapper_meters_exact_bytes():
+    wf = Logged(PackedInt(bits=8))
+    ints = jnp.zeros((1000,), jnp.int32)
+    words = wf.pack(ints, n_workers=N)
+    wf.unpack(words, (1000,), n_summed=N)
+    rep = wf.report()
+    assert rep["pack_bytes"] == 4 * 250 == wf.wire_bytes(1000)
+    assert rep["unpack_bytes"] == 4 * 250
+    assert rep["calls"][("pack", (1000,))] == 1
+
+
+# ---------------------------------------------------------------------------
+# compressor-level codec parity (the vmap n-worker simulation)
+# ---------------------------------------------------------------------------
+def _aggregate(comp, grads, state=()):
+    def worker(g):
+        ghat, _, m = comp.aggregate(
+            state, g, key=jax.random.PRNGKey(0), eta=jnp.float32(0.1), ctx=CTX
+        )
+        return ghat, m
+
+    return coll.vmap_workers(worker, in_axes=0)(grads)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_intsgd_packed_matches_dense_bitexact(bits):
+    """IntSGD over the packed wire decodes to the bit-identical ĝ as over
+    dense lanes: the §5.1 clip is shared, the transport is lossless."""
+    from repro.core.compressor import IntSGD
+    from repro.core.scaling import AlphaState
+
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (N, 301))}
+    state = AlphaState(r=jnp.full((N,), 1e-2), step=jnp.ones((N,), jnp.int32))
+    dense = IntSGD(bits=bits)
+    packed = IntSGD(bits=bits, wire=PackedInt(bits=bits))
+
+    def run(comp):
+        def worker(s, g):
+            ghat, _, m = comp.aggregate(
+                s, g, key=jax.random.PRNGKey(0), eta=jnp.float32(0.1), ctx=CTX
+            )
+            return ghat, m
+
+        return coll.vmap_workers(worker, in_axes=(0, 0))(state, grads)
+
+    gd, md = run(dense)
+    gp, mp = run(packed)
+    np.testing.assert_array_equal(np.asarray(gd["w"]), np.asarray(gp["w"]))
+    # identical wire-width metrics, fewer transport bytes
+    np.testing.assert_array_equal(np.asarray(md.max_int), np.asarray(mp.max_int))
+    assert mp.payload_bytes < md.payload_bytes or bits == 8
+
+
+def test_qsgd_wire_codec_matches_two_lane_transport():
+    """QSGD over a codec wire (packed signed levels) decodes the identical
+    estimate as the paper's (levels, signs) two-lane gather, at half the
+    gathered integer bytes."""
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(4), (N, 140))}
+    g_lanes, m_lanes = _aggregate(make_compressor("qsgd"), grads)
+    g_wire, m_wire = _aggregate(make_compressor("qsgd", wire="packed8"), grads)
+    np.testing.assert_allclose(
+        np.asarray(g_lanes["w"]), np.asarray(g_wire["w"]), rtol=1e-6, atol=1e-7
+    )
+    assert m_wire.payload_bytes < m_lanes.payload_bytes
+
+
+def test_heuristic_intsgd_packed_wire():
+    """HeuristicIntSGD over the packed wire: the profiling α bounds values
+    inside the §5.1 clip, so tightening to the sum-clip is (near-)lossless."""
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(5), (N, 160))}
+    g_d, _ = _aggregate(make_compressor("heuristic_intsgd"), grads)
+    g_p, _ = _aggregate(
+        make_compressor("heuristic_intsgd", wire="packed8"), grads
+    )
+    np.testing.assert_allclose(
+        np.asarray(g_d["w"]), np.asarray(g_p["w"]), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_with_wire_rejects_float_compressors():
+    from repro.core import with_wire
+
+    with pytest.raises(ValueError, match="wire-codec seam"):
+        with_wire(make_compressor("powersgd"), "packed8")
