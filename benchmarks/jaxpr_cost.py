@@ -41,6 +41,24 @@ _CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
                "checkpoint", "custom_lin")
 
 
+def iter_eqns(jaxpr):
+    """Yield every eqn in `jaxpr` and all sub-jaxprs, each ONCE — cond
+    branches and while cond/body included, scan bodies NOT multiplied by
+    trip count. The structural-counting walk (collective counts, primitive
+    presence) builds on this; :func:`jaxpr_cost` keeps its own recursion
+    because byte/FLOP accounting needs scan-length scaling and
+    worst-cond-branch semantics that a flat iteration cannot express."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "cond":
+            for b in eqn.params["branches"]:
+                yield from iter_eqns(b.jaxpr)
+            continue
+        for k, v in eqn.params.items():
+            if k.endswith("jaxpr") and (hasattr(v, "eqns") or hasattr(v, "jaxpr")):
+                yield from iter_eqns(v.jaxpr if hasattr(v, "jaxpr") else v)
+
+
 def _size_bytes(aval) -> int:
     try:
         return int(np.prod(aval.shape)) * aval.dtype.itemsize

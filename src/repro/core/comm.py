@@ -21,6 +21,7 @@ from typing import Tuple
 import jax
 
 from repro.parallel import collectives as coll
+from repro.wire import bucketing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +29,19 @@ class CommCtx:
     axes: Tuple[str, ...]  # mesh/vmap axis names holding the data-parallel workers
     axis_sizes: Tuple[int, ...]
     model_axis: str | None = None  # TP axis (for global profiling reductions)
+    # overlapped-wire configuration (PR 3): "off" = one monolithic psum of
+    # the whole transport tree (the serial reference); "ring" = fixed-size
+    # word buckets, each an independent ppermute ring reduce-scatter +
+    # all-gather, so XLA can hide bucket k's wire time behind pending
+    # compute. Bit-identical decode either way (integer sums are exact).
+    overlap: str = "off"
+    bucket_words: int = bucketing.DEFAULT_BUCKET_WORDS
+
+    def __post_init__(self):
+        if self.overlap not in ("off", "ring"):
+            raise ValueError(
+                f"unknown overlap mode {self.overlap!r}; options ('off', 'ring')"
+            )
 
     @property
     def n(self) -> int:
@@ -44,11 +58,27 @@ class CommCtx:
         format `wf`, sum the transport words across the data-parallel axes
         (the ONLY thing that crosses the wire), and unpack back to the summed
         integer image. Returns ``(words_sum, int_sum)`` — the fused update
-        route consumes the words directly, everything else the image."""
+        route consumes the words directly, everything else the image.
+
+        With ``overlap="ring"`` the words are cut into fixed-size buckets
+        (repro.wire.bucketing) and each bucket ring-reduced independently;
+        the debucketized word sums are bit-identical to the serial psum's,
+        so everything downstream (decode, fused kernels, parity tests) is
+        agnostic to which transport ran."""
         words = jax.tree.map(
             lambda v: wf.pack(v, n_workers=self.n), ints
         )
-        words_sum = coll.psum_wire_words(words, self.axes)
+        if self.overlap == "ring":
+            manifest = bucketing.plan_buckets(
+                words, bucket_words=self.bucket_words
+            )
+            buckets = bucketing.bucketize(words, manifest)
+            buckets_sum = coll.psum_wire_words_bucketed(
+                buckets, self.axes, self.axis_sizes
+            )
+            words_sum = bucketing.debucketize(buckets_sum, manifest)
+        else:
+            words_sum = coll.psum_wire_words(words, self.axes)
         int_sum = jax.tree.map(
             lambda w, v: wf.unpack(w, v.shape, n_summed=self.n),
             words_sum,

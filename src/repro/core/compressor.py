@@ -49,7 +49,7 @@ from repro.core.scaling import (
     AlphaMovingAvg,
     AlphaRule,
 )
-from repro.utils.tree import tree_size, tree_sq_norm
+from repro.utils.tree import tree_abs_max, tree_size, tree_sq_norm
 
 
 def _leaf_dims(params):
@@ -59,15 +59,6 @@ def _leaf_dims(params):
 def aggregate_exact(grads, ctx: CommCtx):
     """Full-precision mean over workers (step-0 / no-compression path)."""
     return ctx.pmean(grads)
-
-
-def _abs_max_f32(tree) -> jax.Array:
-    """max |leaf value| over a pytree, as f32 (wire-width metrics)."""
-    return jnp.max(
-        jnp.stack(
-            [jnp.max(jnp.abs(l).astype(jnp.float32)) for l in jax.tree.leaves(tree)]
-        )
-    )
 
 
 def _leaf_keys(key, tree):
@@ -200,6 +191,38 @@ class IntSGD(Compressor):
             a = jax.tree.map(lambda _: a_scalar, grads)
         return a
 
+    def encode_ints(
+        self, state, grads, *, key, eta, ctx: CommCtx, dims=None,
+        n_accum: int = 1,
+    ):
+        """One worker's §5.1-clipped integer image Int(α∘x) and the α tree —
+        the encode stage alone, no wire traffic. The overlapped train body
+        (launch/step.py microbatch pipelining) calls this per microbatch so
+        each image's bucketed reduce can launch while the next microbatch's
+        backward is still running; ``aggregate_wire`` is the single-shot
+        encode+reduce composition.
+
+        ``n_accum`` is how many summed images the caller will ACCUMULATE on
+        top of the n-worker wire sum (M for M-microbatch pipelining): the
+        clip tightens to ``clip_limit(n·n_accum)`` so the full accumulated
+        sum still fits the value width — without it an int32 wire with
+        M > 1 could wrap the int32 accumulator on clip-saturating
+        gradients. The transport itself still packs/unpacks with n (only n
+        payloads ride each psum), which the tighter clip keeps safe."""
+        n = ctx.n
+        wf = self.wire_format
+        alphas = self._alphas(state, grads, eta, n, dims)
+        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
+        ints = jax.tree.map(
+            lambda g, a, k: wf.encode(
+                g, a, k, n_workers=n * n_accum, stochastic=self.stochastic
+            ),
+            grads,
+            alphas,
+            akeys,
+        )
+        return ints, alphas
+
     def aggregate_wire(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
         """Wire-level aggregation: returns the summed wire payload (packed
         words + integer image, see :class:`WireAggregate`) and the α tree
@@ -209,23 +232,16 @@ class IntSGD(Compressor):
         ``aggregate`` is the decode-here wrapper."""
         n = ctx.n
         wf = self.wire_format
-        alphas = self._alphas(state, grads, eta, n, dims)
-        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
-        ints = jax.tree.map(
-            lambda g, a, k: wf.encode(
-                g, a, k, n_workers=n, stochastic=self.stochastic
-            ),
-            grads,
-            alphas,
-            akeys,
+        ints, alphas = self.encode_ints(
+            state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
-        max_local = lax.pmax(_abs_max_f32(ints), ctx.axes)
+        max_local = lax.pmax(tree_abs_max(ints), ctx.axes)
         # THE wire: codec-packed integer all-reduce. On TPU this is the ICI
         # collective carrying only integer transport words — the paper's
         # INA/all-reduce analog, at bits/8 bytes per coordinate for the
         # packed codec.
         words_sum, int_sum = ctx.psum_wire(ints, wf)
-        max_int = _abs_max_f32(int_sum)
+        max_int = tree_abs_max(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         payload = _payload_bytes(wf, grads)
         return (
@@ -290,7 +306,7 @@ class HeuristicIntSGD(Compressor):
         )
         _, int_sum = ctx.psum_wire(ints, wf)
         ghat = jax.tree.map(lambda s: wf.decode(s, alpha, n_workers=n), int_sum)
-        max_int = _abs_max_f32(int_sum)
+        max_int = tree_abs_max(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         return ghat, state, Metrics(max_int, bits, _payload_bytes(wf, grads))
 
@@ -654,7 +670,7 @@ class IntDIANA(Compressor):
             diff,
             akeys,
         )
-        max_local = lax.pmax(_abs_max_f32(ints), ctx.axes)
+        max_local = lax.pmax(tree_abs_max(ints), ctx.axes)
         # local shift: h_i += Q(g_i - h_i) = (1/α) Int(α (g_i - h_i))
         q_local = jax.tree.map(lambda s: s.astype(jnp.float32) / alpha, ints)
         h_local = jax.tree.map(jnp.add, state["h_local"], q_local)
@@ -664,7 +680,7 @@ class IntDIANA(Compressor):
         )
         ghat = jax.tree.map(jnp.add, state["h_global"], mean_q)
         h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
-        max_int = _abs_max_f32(int_sum)
+        max_int = tree_abs_max(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         new_state = dict(state, h_local=h_local, h_global=h_global)
         return ghat, new_state, Metrics(

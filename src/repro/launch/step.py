@@ -20,6 +20,14 @@ style, replication checks disabled):
         place of a master copy; consumes the codec's transport words
         directly (packed words are unpacked in-register, never in HBM).
 
+  * wire transport is either one monolithic psum (``overlap="off"``, the
+    serial reference) or bucketed ``lax.ppermute`` rings
+    (``overlap="ring"``) that XLA's scheduler hides behind pending compute;
+    with ``microbatches > 1`` the train body encodes and LAUNCHES each
+    microbatch's integer image as soon as its backward finishes, so bucket
+    k of microbatch i reduces while backward of microbatch i+1 runs. Both
+    routes decode bit-identically (integer sums are exact in any order).
+
 Every builder (train / init / serve / eval) resolves the SAME
 :class:`Layout` and terminates in the SAME ``collectives.sharded_jit``
 pipeline — there is exactly one shard_map+jit construction path.
@@ -59,6 +67,8 @@ from repro.models.transformer import lm_forward, lm_logits_local, lm_loss
 from repro.optim.base import Optimizer
 from repro.optim.zero1 import zero1_init, zero1_state_specs, zero1_update
 from repro.parallel import collectives as coll
+from repro.utils.tree import tree_abs_max
+from repro.wire import bucketing
 
 
 # ---------------------------------------------------------------------------
@@ -184,10 +194,14 @@ def resolve_layout(
     param_dtype=jnp.bfloat16,
     tp_override: Optional[int] = None,
     remap_tp1: bool = False,
+    overlap: str = "off",
+    bucket_words: int = bucketing.DEFAULT_BUCKET_WORDS,
 ) -> Layout:
     """Derive the layout. With ``remap_tp1`` (train path), a tp==1 override
     turns the whole mesh data-parallel: the model is replicated and IntSGD
-    aggregates over every chip."""
+    aggregates over every chip. ``overlap``/``bucket_words`` configure the
+    wire transport on the resulting CommCtx ("off" = one monolithic psum,
+    "ring" = bucketed ppermute rings XLA can hide behind compute)."""
     tp = tp_override if tp_override is not None else mesh.shape["model"]
     if remap_tp1 and tp == 1:
         dp = tuple(mesh.axis_names)
@@ -198,7 +212,10 @@ def resolve_layout(
     for s in dp_sizes:
         n_dp *= s
     axes = Axes(tp="model", tp_size=tp) if tp > 1 else Axes()
-    ctx = CommCtx(axes=dp, axis_sizes=dp_sizes, model_axis="model")
+    ctx = CommCtx(
+        axes=dp, axis_sizes=dp_sizes, model_axis="model",
+        overlap=overlap, bucket_words=bucket_words,
+    )
     g_shapes, l_shapes, pspecs = specs_mod.infer_param_specs(cfg, tp)
     cast = lambda t: jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, param_dtype), t
@@ -310,6 +327,80 @@ def _clip_factor(layout: Layout, clip_norm, *, ghat=None, int_sum=None,
     return jnp.minimum(1.0, clip_norm / (jnp.sqrt(sq) + 1e-12))
 
 
+def _microbatch(batch, m: int, n_micro: int):
+    """Static slice m of n_micro along the (local) batch dim of every leaf."""
+    def one(v):
+        b = v.shape[0] // n_micro
+        return v[m * b : (m + 1) * b]
+
+    return jax.tree.map(one, batch)
+
+
+def _pipelined_grad_stage(
+    layout: Layout, loss_fn, compressor: IntSGD, cs, params, batch, akey, eta,
+    n_micro: int,
+):
+    """Microbatch/grad-accum wire pipelining: encode microbatch i's integer
+    image and LAUNCH its (bucketed) all-reduce immediately, then start
+    backward of microbatch i+1 — the data dependencies leave bucket k of
+    image i free to ride the wire while compute i+1 runs, which is exactly
+    the overlap XLA's latency-hiding scheduler exploits on the ring route.
+
+    Math: each microbatch image is clipped for the FULL n·M accumulated sum
+    (``encode_ints(n_accum=M)`` — so the int32 accumulator can never wrap,
+    even on a 32-bit wire with clip-saturating gradients) and reduced
+    separately; the M summed images then add exactly, so
+
+        ghat = (1/(n·M·α)) Σ_m Σ_i Int(α g_i^m)
+
+    is the mean of M independent IntSGD estimates — the same estimator
+    whether the transport is the serial psum or the bucketed rings (parity
+    is pinned by tests/test_overlap.py)."""
+    n = layout.ctx.n
+    wf = compressor.wire_format
+    loss_acc = jnp.zeros(())
+    max_int = jnp.zeros(())
+    int_acc = alphas = None
+    for m in range(n_micro):
+        mb = _microbatch(batch, m, n_micro)
+        loss_m, grads_m = _forward_backward(layout, loss_fn, params, mb)
+        ints_m, alphas = compressor.encode_ints(
+            cs, grads_m, key=jax.random.fold_in(akey, m), eta=eta,
+            ctx=layout.ctx, dims=layout.dims, n_accum=n_micro,
+        )
+        # the reduce of image m is issued HERE, before backward of m+1 —
+        # no result of it is needed until the decode after the loop
+        _, int_sum_m = layout.ctx.psum_wire(ints_m, wf)
+        int_acc = (
+            int_sum_m if int_acc is None
+            else jax.tree.map(jnp.add, int_acc, int_sum_m)
+        )
+        # wire-width metric: what each psum actually carried, not the
+        # M-fold accumulated sum
+        max_int = jnp.maximum(max_int, tree_abs_max(int_sum_m))
+        loss_acc = loss_acc + loss_m
+    ghat = jax.tree.map(
+        lambda s, a: wf.decode(s, a, n_workers=n * n_micro), int_acc, alphas
+    )
+    bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
+    return ghat, loss_acc / n_micro, (max_int, bits)
+
+
+def _accum_grad_stage(layout: Layout, loss_fn, params, batch, n_micro: int):
+    """Plain gradient accumulation (exact step / non-IntSGD compressors):
+    mean of the microbatch gradients in f32, one aggregation afterwards."""
+    loss_acc = jnp.zeros(())
+    g_acc = None
+    for m in range(n_micro):
+        mb = _microbatch(batch, m, n_micro)
+        loss_m, grads_m = _forward_backward(layout, loss_fn, params, mb)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads_m)
+        g_acc = g32 if g_acc is None else jax.tree.map(jnp.add, g_acc, g32)
+        loss_acc = loss_acc + loss_m
+    grads = jax.tree.map(lambda g: g / n_micro, g_acc)
+    return loss_acc / n_micro, grads
+
+
 def _make_train_body(
     layout: Layout,
     *,
@@ -321,39 +412,53 @@ def _make_train_body(
     exact: bool,
     update_route: str,  # "zero1" | "fused"
     clip_norm: Optional[float] = None,
+    microbatches: int = 1,
 ):
     """The ONE train/optimize step body, parameterized by (loss, compressor,
-    optimizer, fused-kernel routing, clipping). All jitted train variants are
-    built from it."""
+    optimizer, fused-kernel routing, clipping, microbatch pipelining). All
+    jitted train variants are built from it."""
     if update_route == "fused":
         mu, wd = _fused_sgd_hyper(base_opt, compressor)
+    pipelined = microbatches > 1 and isinstance(compressor, IntSGD)
 
     def step(params, opt_state, comp_state, step_idx, key, batch):
         eta = lr_schedule(step_idx)
-        loss, grads = _forward_backward(layout, loss_fn, params, batch)
         cs = _unstack_comp(comp_state)
         wa = alphas = None
-        if exact:
-            ghat = aggregate_exact(grads, layout.ctx)
-            metrics = (jnp.zeros(()), jnp.zeros(()))
-        else:
-            akey = jax.random.fold_in(key, 1)
-            if update_route == "fused":
-                wa, alphas, cs, m = compressor.aggregate_wire(
-                    cs, grads, key=akey, eta=eta, ctx=layout.ctx,
-                    dims=layout.dims,
-                )
-                ghat = None
-            else:
-                ghat, cs, m = compressor.aggregate(
-                    cs, grads, key=akey, eta=eta, ctx=layout.ctx,
-                    dims=layout.dims,
-                )
-            m_axes = layout.dp + (("model",) if layout.tp > 1 else ())
-            metrics = (
-                lax.pmax(m.max_int, m_axes),
-                lax.pmax(m.bits_per_coord, m_axes),
+        akey = jax.random.fold_in(key, 1)
+        m_axes = layout.dp + (("model",) if layout.tp > 1 else ())
+        if not exact and pipelined:
+            ghat, loss, (max_int, bits) = _pipelined_grad_stage(
+                layout, loss_fn, compressor, cs, params, batch, akey, eta,
+                microbatches,
             )
+            metrics = (lax.pmax(max_int, m_axes), lax.pmax(bits, m_axes))
+        else:
+            if microbatches > 1:
+                loss, grads = _accum_grad_stage(
+                    layout, loss_fn, params, batch, microbatches
+                )
+            else:
+                loss, grads = _forward_backward(layout, loss_fn, params, batch)
+            if exact:
+                ghat = aggregate_exact(grads, layout.ctx)
+                metrics = (jnp.zeros(()), jnp.zeros(()))
+            else:
+                if update_route == "fused":
+                    wa, alphas, cs, m = compressor.aggregate_wire(
+                        cs, grads, key=akey, eta=eta, ctx=layout.ctx,
+                        dims=layout.dims,
+                    )
+                    ghat = None
+                else:
+                    ghat, cs, m = compressor.aggregate(
+                        cs, grads, key=akey, eta=eta, ctx=layout.ctx,
+                        dims=layout.dims,
+                    )
+                metrics = (
+                    lax.pmax(m.max_int, m_axes),
+                    lax.pmax(m.bits_per_coord, m_axes),
+                )
 
         if clip_norm is not None:
             scale = _clip_factor(
@@ -441,6 +546,9 @@ def build_train_step(
     fused: bool = False,
     clip_norm: Optional[float] = None,
     wire=None,
+    overlap: str = "off",
+    bucket_words: int = bucketing.DEFAULT_BUCKET_WORDS,
+    microbatches: int = 1,
 ) -> StepArtifacts:
     from repro.launch.inputs import input_specs
 
@@ -448,10 +556,26 @@ def build_train_step(
         # config-level codec selection: rebind the compressor's transport
         # (accepts a repro.wire registry name or a WireFormat instance)
         compressor = with_wire(compressor, wire)
+    if microbatches > 1 and fused:
+        raise ValueError(
+            "microbatch pipelining accumulates summed integer images, which "
+            "the fused packed-word kernel cannot consume; use the zero1 "
+            "route (fused=False) with microbatches > 1"
+        )
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
     layout = resolve_layout(
         cfg, mesh, param_dtype=param_dtype, tp_override=tp_override,
-        remap_tp1=True,
+        remap_tp1=True, overlap=overlap, bucket_words=bucket_words,
     )
+    if microbatches > 1:
+        local_batch = shape.global_batch // layout.n_dp
+        if local_batch % microbatches:
+            raise ValueError(
+                f"local batch {local_batch} (global {shape.global_batch} over "
+                f"{layout.n_dp} workers) is not divisible into "
+                f"{microbatches} microbatches"
+            )
     loss_fn = _loss_fn_for(cfg)
 
     if fused:
@@ -505,6 +629,7 @@ def build_train_step(
             exact=exact,
             update_route="fused" if fused else "zero1",
             clip_norm=clip_norm,
+            microbatches=microbatches,
         )
         return _sharded(
             layout, body, in_specs, out_specs,

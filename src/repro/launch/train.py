@@ -25,6 +25,7 @@ from repro.models.transformer import init_lm_params
 from repro.optim import sgd
 from repro.optim.schedules import constant, warmup_wrap
 from repro.parallel.collectives import mesh_from_counts
+from repro.wire.bucketing import DEFAULT_BUCKET_WORDS
 
 
 def train_loop(
@@ -44,6 +45,9 @@ def train_loop(
     fused: bool = False,
     clip_norm: float | None = 1.0,
     wire: str | None = None,
+    overlap: str = "off",
+    bucket_words: int = DEFAULT_BUCKET_WORDS,
+    microbatches: int = 1,
 ):
     comp = make_compressor(compressor)
     if wire is not None:
@@ -54,6 +58,7 @@ def train_loop(
         cfg, mesh, shape, compressor=comp, base_opt=opt,
         lr_schedule=sched, param_dtype=param_dtype,
         fused=fused, clip_norm=clip_norm,
+        overlap=overlap, bucket_words=bucket_words, microbatches=microbatches,
     )
     tp = mesh.shape["model"]
     n_dp = mesh.size // tp
@@ -124,6 +129,17 @@ def main():
                     help="route the update through the Pallas fused "
                          "dequantize+SGD kernel")
     ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--overlap", default="off", choices=["off", "ring"],
+                    help="wire transport: 'off' = one monolithic integer "
+                         "psum; 'ring' = bucketed ppermute ring all-reduce "
+                         "XLA overlaps with backward compute (bit-identical "
+                         "result)")
+    ap.add_argument("--bucket-words", type=int, default=DEFAULT_BUCKET_WORDS,
+                    help="transport words per overlap bucket")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="grad-accum microbatches; with --overlap ring, "
+                         "microbatch i's wire reduce runs behind microbatch "
+                         "i+1's backward")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -137,6 +153,8 @@ def main():
         compressor=args.compressor, steps=args.steps, lr=args.lr,
         ckpt=ckpt, resume=args.resume, fused=args.fused,
         clip_norm=args.clip_norm, wire=args.wire,
+        overlap=args.overlap, bucket_words=args.bucket_words,
+        microbatches=args.microbatches,
     )
 
 

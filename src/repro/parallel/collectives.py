@@ -144,6 +144,16 @@ def psum_tree(x, axes):
     return jax.tree.map(lambda v: lax.psum(v, axes), x)
 
 
+def _check_wire_dtypes(words):
+    for v in jax.tree.leaves(words):
+        if not jnp.issubdtype(v.dtype, jnp.integer):
+            raise TypeError(
+                f"wire payload must be integer, got {v.dtype} — the IntSGD "
+                "wire carries no floats (route float reductions through "
+                "psum_tree instead)"
+            )
+
+
 def psum_wire_words(words, axes):
     """The packed-word integer all-reduce — THE floatless-wire primitive.
 
@@ -152,18 +162,74 @@ def psum_wire_words(words, axes):
     contract structural: a float leaf on the gradient wire is a bug, not a
     silent fallback. Wrap-around integer addition is exactly what the
     packed-field arithmetic needs (see repro/wire/packed.py).
+
+    The whole tree rides ONE psum primitive — the serial reference the
+    bucketed route (:func:`psum_wire_words_bucketed`) is measured against:
+    one monolithic collective on the critical path vs many interleavable
+    ones (benchmarks/bench_overlap.py counts exactly this).
     """
+    _check_wire_dtypes(words)
+    return lax.psum(words, axes)
 
-    def _one(v):
-        if not jnp.issubdtype(v.dtype, jnp.integer):
-            raise TypeError(
-                f"wire payload must be integer, got {v.dtype} — the IntSGD "
-                "wire carries no floats (route float reductions through "
-                "psum_tree instead)"
-            )
-        return lax.psum(v, axes)
 
-    return jax.tree.map(_one, words)
+def ring_allreduce_int(v, axis: str, n: int):
+    """Integer all-reduce of one flat array as a ``lax.ppermute`` ring
+    reduce-scatter followed by an all-gather (the SwitchML/NCCL shape).
+
+    Why not one psum: a psum is a single opaque collective on the critical
+    path. The ring decomposes it into n-1 chunk-sized ppermute hops plus a
+    chunk all-gather — independent ops XLA's latency-hiding scheduler can
+    overlap with pending compute (the next bucket's pack, the next
+    microbatch's backward). Integer addition is exact and associative
+    (wrap-around mod 2^width), so the ring sum is BIT-IDENTICAL to the psum
+    for any hop order — dense lanes never overflow mid-ring (any partial sum
+    of k <= n §5.1-clipped values fits the lane), packed words wrap exactly
+    per field. Works under shard_map AND vmap(axis_name), like every other
+    primitive here.
+    """
+    if n <= 1:
+        return v
+    size = v.size
+    c = -(-size // n)  # ring chunk: pad only to a multiple of n
+    chunks = jnp.pad(v.reshape(-1), (0, n * c - size)).reshape(n, c)
+    i = lax.axis_index(axis)
+    perm = [(d, (d + 1) % n) for d in range(n)]
+    take = lambda j: lax.dynamic_index_in_dim(
+        chunks, jnp.mod(j, n), 0, keepdims=False
+    )
+    # reduce-scatter: after step s the in-flight partial for chunk
+    # (i - s - 2) mod n has accumulated s + 2 contributions; after n-1 steps
+    # device i holds the full sum of chunk i.
+    send = take(i - 1)
+    for s in range(n - 1):
+        recvd = lax.ppermute(send, axis, perm)
+        send = recvd + take(i - s - 2)
+    # all-gather of the finished chunks (device i contributed chunk i, so
+    # the gathered rows are already in chunk order)
+    out = lax.all_gather(send, axis)
+    return out.reshape(-1)[:size].reshape(v.shape)
+
+
+def psum_wire_words_bucketed(buckets, axes, sizes):
+    """Bucketed async-capable integer all-reduce — the ``overlap`` wire.
+
+    ``buckets`` is the list of fixed-size 1-D word buckets cut by
+    :mod:`repro.wire.bucketing`; each is ring-reduced independently
+    (sequentially over multi-axis dp grids: a ring per mesh axis), emitting
+    2+ small collectives per bucket instead of one monolithic psum, so the
+    XLA scheduler can double-buffer bucket k's wire time against whatever
+    compute is still pending. Bit-identical to ``psum_wire_words`` on the
+    debucketized tree (integer addition is exact in any order); same dtype
+    guard — the floatless wire stays structural on the overlapped route.
+    """
+    _check_wire_dtypes(buckets)
+
+    def _one(b):
+        for ax, n in zip(axes, sizes):
+            b = ring_allreduce_int(b, ax, n)
+        return b
+
+    return [_one(b) for b in buckets]
 
 
 def pmax_tree(x, axes):

@@ -41,9 +41,28 @@ def plan_after_failures(
     failed_devices: Sequence[int],
     global_batch: int,
     keep_global_batch: bool = True,
+    wire=None,
+    microbatches: int = 1,
 ) -> ElasticPlan:
     """Devices are numbered dp-major: device = dp_index * tp + tp_index.
-    A dp replica survives iff ALL of its tp members survive."""
+    A dp replica survives iff ALL of its tp members survive.
+
+    ``wire`` (codec name or WireFormat) re-validates the wire configuration
+    for the NEW worker count at plan time: the §5.1 clip limit
+    ``(2^(bits-1)-1) // n`` depends on n, so growing back after failures (or
+    a paradoxical shrink across a power-of-two boundary) can cross into the
+    degenerate range where every integer clips to 0. Without this check the
+    :class:`~repro.wire.base.WireRangeError` only fires at TRACE time, deep
+    inside the rebuilt step — after the checkpoint restore and re-mesh work
+    is already done. Validating here fails (or warns via ``note``) before
+    any of that starts.
+
+    ``microbatches`` must match the rebuilt step's setting: with M-microbatch
+    pipelining the step encodes with ``clip_limit(n_dp·M)``
+    (``IntSGD.encode_ints(n_accum=M)``), so THAT is the product that must
+    stay representable — and keep_global_batch re-meshes typically RAISE M
+    to fit the bigger per-worker batch, pushing toward the boundary.
+    """
     failed = set(failed_devices)
     retired = tuple(
         r for r in range(dp) if any(r * tp + t in failed for t in range(tp))
@@ -59,6 +78,23 @@ def plan_after_failures(
     else:
         gb = global_batch * n_dp // dp
         note = f"global batch rescaled {global_batch}->{gb}; lr should scale by {n_dp}/{dp}"
+    if wire is not None:
+        from repro.wire import make_wire_format
+
+        wf = make_wire_format(wire)
+        # raises WireRangeError at PLAN time if int{bits} cannot carry the
+        # accumulated sum over the surviving n_dp workers x M microbatches
+        lim_new = wf.clip_limit(n_dp * microbatches)
+        try:
+            lim_old = wf.clip_limit(dp * microbatches)
+            delta = f"clip limit {lim_old}->{lim_new}"
+        except Exception:  # the OLD count was itself out of range
+            delta = f"clip limit ->{lim_new} (previous n_dp={dp} was invalid)"
+        mb = f" x{microbatches} microbatches" if microbatches > 1 else ""
+        note += (
+            f"; wire {wf.name}{wf.bits} revalidated for n_dp'={n_dp}{mb} "
+            f"({delta})"
+        )
     return ElasticPlan(
         n_dp=n_dp, tp=tp, retired_replicas=retired, global_batch=gb, note=note
     )

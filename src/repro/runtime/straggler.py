@@ -12,6 +12,19 @@ Contrast: PowerSGD's two-phase P/Q all-reduces and QSGD's all-gather cannot
 drop a late worker without restarting the collective — the sum-of-ints
 contract is what buys this.
 
+The partial sum goes over the WIRE CODEC, not the raw integer tree: a late
+worker is modelled as sending the codec's encoding of the all-zeros image.
+Zero-masking is NOT "identical on-the-wire math" for every codec — for
+:class:`~repro.wire.packed.PackedInt` each field carries the bias-shifted
+``v + lim``, so a masked worker's word is the pure bias pattern
+``Σ_j lim << j·bits``, not the zero word. Unpacking the n-worker word sum
+with ``n_summed = n`` subtracts exactly ``n·lim`` per field — the dead
+workers' bias included — which is the alive-aware bias correction that makes
+the masked contribution exactly zero post-unpack (pinned by the property
+tests in tests/test_runtime.py). Skipping the codec (the pre-PR-3 behavior)
+silently diverged under PackedInt: the raw-tree psum missed the bias
+accounting and the decode divided a full-bias sum by n_live.
+
 In production the timeout lives in the collective runtime; here we model it
 as a mask so the policy is testable: `straggler_tolerant_sum` is the exact
 aggregation rule the paper's Algorithm 1 line 12 degrades to under loss.
@@ -23,23 +36,53 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.comm import CommCtx
+from repro.wire import DenseInt, WireFormat
 
 
-def straggler_tolerant_sum(ints_tree, alive: jax.Array, ctx: CommCtx):
-    """ints_tree: this worker's Int(α∘g) payload; alive: bool scalar (did
-    this worker make the deadline). Returns (sum over alive workers,
-    n_live). Late workers contribute zeros — identical on-the-wire math to
-    the switch simply not adding their packets."""
+def straggler_tolerant_sum(
+    ints_tree, alive: jax.Array, ctx: CommCtx, wf: WireFormat | None = None
+):
+    """Partial integer aggregation over the wire codec.
+
+    ``ints_tree``: this worker's Int(α∘g) payload (the §5.1-clipped integer
+    image); ``alive``: bool scalar (did this worker make the deadline);
+    ``wf``: the wire codec the payload rides (defaults to the int32 dense
+    transport). Returns ``(sum over alive workers, n_live)``.
+
+    A late worker's image is zero-masked BEFORE pack, so what it puts on the
+    wire is ``wf.pack(0)`` — for PackedInt the pure guard-bit bias word,
+    whose contribution ``unpack(..., n_summed=ctx.n)`` subtracts exactly
+    (every one of the n workers' bias terms entered the word sum, alive or
+    not). The transport stays structurally floatless: the psum routes
+    through ``CommCtx.psum_wire`` like every other wire reduction.
+    """
+    wf = DenseInt(bits=32) if wf is None else wf
     a = alive.astype(jnp.int32)
     masked = jax.tree.map(lambda v: v * a, ints_tree)
-    int_sum = ctx.psum(masked)
+    _, int_sum = ctx.psum_wire(masked, wf)
     n_live = lax.psum(a, ctx.axes)
     return int_sum, n_live
 
 
-def decode_partial(int_sum_tree, alpha, n_live):
-    """ghat = (1/(n_live·α)) Σ_alive Int(α g_i)."""
-    scale = 1.0 / (jnp.maximum(n_live, 1).astype(jnp.float32))
-    return jax.tree.map(
-        lambda s: s.astype(jnp.float32) * scale / alpha, int_sum_tree
+def decode_partial(int_sum_tree, alphas, n_live):
+    """ghat = (1/(n_live·α_l)) Σ_alive Int(α_l g_i) per leaf.
+
+    ``alphas`` is either a scalar α (Algorithm 1) or a per-leaf α tree
+    matching ``int_sum_tree`` (Algorithm 2's blockwise rule) — a tree must
+    NOT be broadcast through a scalar formula, each leaf divides by its own
+    α. Returns ``(ghat_tree, all_dead)``: when every worker missed the
+    deadline (``n_live == 0``) there is NO gradient information, and a
+    silent zero decode would freeze training invisibly — the ``all_dead``
+    bool flag surfaces it so the driver can skip the step / re-run the
+    round, while the division stays finite via the max(n_live, 1) guard.
+    """
+    if jax.tree.structure(alphas) != jax.tree.structure(int_sum_tree):
+        alphas = jax.tree.map(lambda _: alphas, int_sum_tree)
+    all_dead = n_live == 0
+    denom = jnp.maximum(n_live, 1).astype(jnp.float32)
+    ghat = jax.tree.map(
+        lambda s, a: s.astype(jnp.float32) / (denom * a),
+        int_sum_tree,
+        alphas,
     )
+    return ghat, all_dead

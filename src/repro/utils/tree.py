@@ -77,3 +77,11 @@ def unflatten_from_vector(vec, like):
         out.append(vec[off : off + size].reshape(l.shape).astype(l.dtype))
         off += size
     return jax.tree.unflatten(treedef, out)
+
+
+def tree_abs_max(a):
+    """max |leaf value| over all leaves, as f32 (wire-width metrics)."""
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x: jnp.max(jnp.abs(x).astype(jnp.float32)), a)
+    )
+    return jnp.max(jnp.stack(leaves))

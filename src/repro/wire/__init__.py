@@ -12,6 +12,12 @@ Registry names accepted everywhere a codec can be configured
 from __future__ import annotations
 
 from repro.wire.base import WireFormat, WireRangeError
+from repro.wire.bucketing import (
+    BucketManifest,
+    bucketize,
+    debucketize,
+    plan_buckets,
+)
 from repro.wire.dense import DenseInt
 from repro.wire.logged import Logged
 from repro.wire.packed import PackedInt
@@ -22,6 +28,10 @@ __all__ = [
     "DenseInt",
     "PackedInt",
     "Logged",
+    "BucketManifest",
+    "bucketize",
+    "debucketize",
+    "plan_buckets",
     "make_wire_format",
 ]
 

@@ -1,0 +1,123 @@
+"""Bucketing — fixed-size transport-word buckets for the overlapped wire.
+
+The overlap subsystem's unit of communication is a BUCKET: a fixed-size
+contiguous run of transport words cut from the concatenation of every leaf's
+packed payload. Buckets exist so the integer all-reduce can be issued as
+several independent collectives instead of one monolithic psum — XLA's
+latency-hiding scheduler is then free to interleave bucket k's ring transfer
+with whatever compute (the next microbatch's backward, the unpack of bucket
+k-1) is still pending.
+
+The mapping is purely structural and exactly invertible::
+
+    bucketize   : words tree -> [bucket_0, ..., bucket_{B-1}]   (1-D, fixed
+                  ``bucket_words`` each except a ragged tail)
+    debucketize : buckets    -> words tree                      (bit-exact)
+
+with the :class:`BucketManifest` (all-static: treedef, per-leaf shapes,
+offsets, bucket sizes) recording how to invert. No value ever changes — the
+manifest is slicing bookkeeping, so the bucketed route transports exactly the
+same words as the serial route (zero byte inflation; the parity guarantee of
+the overlap contract reduces to the exactness of integer addition).
+
+Every leaf of one codec shares a single transport dtype (int32 words for
+PackedInt, one narrow lane dtype for DenseInt), which is what makes the
+cross-leaf concatenation legal; a mixed-dtype tree is a configuration error
+and raises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BucketManifest", "plan_buckets", "bucketize", "debucketize"]
+
+DEFAULT_BUCKET_WORDS = 1 << 16  # 256 KiB of int32 words per bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketManifest:
+    """Static inversion record for one (words tree, bucket_words) pairing.
+
+    ``leaf_shapes``/``leaf_sizes`` follow ``treedef``'s flatten order;
+    ``bucket_sizes`` lists each bucket's word count (all ``bucket_words``
+    except possibly the ragged last). ``total_words`` is their sum — exactly
+    the serial route's word count, pinned by :mod:`benchmarks.bench_overlap`.
+    """
+
+    treedef: Any
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_sizes: Tuple[int, ...]
+    dtype: Any
+    bucket_words: int
+    bucket_sizes: Tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def total_words(self) -> int:
+        return sum(self.bucket_sizes)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Exact bytes one worker's bucketed payload puts on the collective —
+        identical to the serial route's (bucketing adds no padding)."""
+        return self.total_words * jnp.dtype(self.dtype).itemsize
+
+
+def plan_buckets(words_tree, *, bucket_words: int = DEFAULT_BUCKET_WORDS) -> BucketManifest:
+    """Derive the manifest from a (concrete or abstract) transport-word tree."""
+    if bucket_words <= 0:
+        raise ValueError(f"bucket_words must be positive, got {bucket_words}")
+    leaves, treedef = jax.tree.flatten(words_tree)
+    if not leaves:
+        raise ValueError("cannot bucket an empty transport tree")
+    dtypes = {jnp.dtype(l.dtype) for l in leaves}
+    if len(dtypes) != 1:
+        raise ValueError(
+            f"bucketing needs one transport dtype across all leaves, got "
+            f"{sorted(str(d) for d in dtypes)} — one wire codec per tree"
+        )
+    sizes = tuple(int(math.prod(l.shape)) for l in leaves)
+    total = sum(sizes)
+    full, tail = divmod(total, bucket_words)
+    bucket_sizes = (bucket_words,) * full + ((tail,) if tail else ())
+    return BucketManifest(
+        treedef=treedef,
+        leaf_shapes=tuple(tuple(l.shape) for l in leaves),
+        leaf_sizes=sizes,
+        dtype=dtypes.pop(),
+        bucket_words=bucket_words,
+        bucket_sizes=bucket_sizes,
+    )
+
+
+def bucketize(words_tree, manifest: BucketManifest) -> List[jax.Array]:
+    """words tree -> list of 1-D buckets (fixed size, ragged tail)."""
+    leaves = jax.tree.leaves(words_tree)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    out, off = [], 0
+    for size in manifest.bucket_sizes:
+        out.append(flat[off : off + size])
+        off += size
+    return out
+
+
+def debucketize(buckets: List[jax.Array], manifest: BucketManifest):
+    """Exact inverse of :func:`bucketize` (same words, same tree)."""
+    if len(buckets) != manifest.n_buckets:
+        raise ValueError(
+            f"manifest expects {manifest.n_buckets} buckets, got {len(buckets)}"
+        )
+    flat = jnp.concatenate([b.reshape(-1) for b in buckets])
+    leaves, off = [], 0
+    for shape, size in zip(manifest.leaf_shapes, manifest.leaf_sizes):
+        leaves.append(flat[off : off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(manifest.treedef, leaves)

@@ -1,25 +1,9 @@
 """Multi-device integration tests (forced 4-CPU-device subprocess):
 shard_map train step learns, TP cross-entropy matches unsharded reference,
 pipeline parallelism matches sequential execution."""
-import subprocess
-import sys
-import os
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(script: str, timeout=420):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=timeout, env=env,
-    )
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from conftest import run_forced_mesh as _run
 
 
 @pytest.mark.slow

@@ -1,11 +1,12 @@
-"""Fault tolerance: elastic re-mesh planning + straggler-tolerant sums +
-end-to-end failure/recovery with checkpoint restore and worker-count change
-(IntSGD's α adapts because n is an input)."""
+"""Fault tolerance: elastic re-mesh planning + straggler-tolerant sums over
+the wire codec + end-to-end failure/recovery with checkpoint restore and
+worker-count change (IntSGD's α adapts because n is an input)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_forced_mesh
 from repro.core import make_compressor
 from repro.core.comm import CommCtx
 from repro.core.simulate import SimTrainer
@@ -13,8 +14,10 @@ from repro.checkpoint import CheckpointStore
 from repro.data.logreg import make_logreg
 from repro.optim import sgd
 from repro.optim.schedules import constant
+from repro.parallel import collectives as coll
 from repro.runtime import plan_after_failures, straggler_tolerant_sum
 from repro.runtime.straggler import decode_partial
+from repro.wire import DenseInt, PackedInt, WireRangeError
 
 
 def test_elastic_plan_retires_whole_tp_groups():
@@ -38,6 +41,43 @@ def test_elastic_plan_total_failure():
         plan_after_failures(dp=2, tp=2, failed_devices=[0, 3], global_batch=8)
 
 
+def test_elastic_plan_validates_wire_codec():
+    """Re-meshing must re-validate the wire codec for the NEW worker count
+    at PLAN time: int8's clip limit (2^7-1)//n degenerates to 0 at n>=128,
+    which previously only surfaced as a WireRangeError deep at trace time
+    inside the rebuilt step."""
+    # valid: surviving count stays representable; the note surfaces the lim
+    plan = plan_after_failures(
+        dp=16, tp=1, failed_devices=[5], global_batch=256, wire="packed8"
+    )
+    assert plan.n_dp == 15
+    assert "packed8" in plan.note and "revalidated" in plan.note
+    assert "clip limit 7->8" in plan.note
+    # invalid: 130 replicas minus 2 leaves 128 — int8 cannot carry that sum
+    with pytest.raises(WireRangeError):
+        plan_after_failures(
+            dp=130, tp=1, failed_devices=[0, 1], global_batch=256,
+            wire="packed8",
+        )
+    # the microbatch-pipelined step clips for n_dp x M — the plan must
+    # validate THAT product (32 workers alone fit int8; x8 microbatches not)
+    with pytest.raises(WireRangeError):
+        plan_after_failures(
+            dp=33, tp=1, failed_devices=[0], global_batch=256,
+            wire="packed8", microbatches=8,
+        )
+    plan_mb = plan_after_failures(
+        dp=33, tp=1, failed_devices=[0], global_batch=256,
+        wire="packed8", microbatches=2,
+    )
+    assert "x2 microbatches" in plan_mb.note
+    # no codec given -> behavior unchanged
+    plan2 = plan_after_failures(
+        dp=130, tp=1, failed_devices=[0, 1], global_batch=256
+    )
+    assert plan2.n_dp == 128
+
+
 def test_straggler_tolerant_sum():
     """Dropping a straggler = sum over alive + divide by n_live; exact."""
     n = 4
@@ -53,8 +93,134 @@ def test_straggler_tolerant_sum():
     expect = np.asarray(ints)[np.asarray(alive)].sum(0)
     np.testing.assert_array_equal(np.asarray(s[0]), expect)
     assert int(n_live[0]) == 3
-    ghat = decode_partial({"g": s[0]}, jnp.float32(2.0), n_live[0])
+    ghat, all_dead = decode_partial({"g": s[0]}, jnp.float32(2.0), n_live[0])
     np.testing.assert_allclose(np.asarray(ghat["g"]), expect / (3 * 2.0), rtol=1e-6)
+    assert not bool(all_dead)
+
+
+@pytest.mark.parametrize("wf", [DenseInt(bits=8), PackedInt(bits=8)],
+                         ids=["dense8", "packed8"])
+def test_straggler_masked_contribution_is_exactly_zero(wf):
+    """A dead worker contributes EXACTLY zero post-unpack, whatever garbage
+    its integer image held — for PackedInt this is the guard-bit bias
+    correction (its wire word is the pure bias pattern, subtracted by
+    unpack's n_summed=n accounting), not a lucky zero."""
+    n = 4
+    ctx = CommCtx(axes=(coll.WORKER_AXIS,), axis_sizes=(n,))
+    lim = wf.clip_limit(n)
+    key = jax.random.PRNGKey(7)
+    ints = jax.random.randint(key, (n, 257), -lim, lim + 1)
+    alive = jnp.array([True, True, False, True])
+
+    def run(payload):
+        def worker(x, a):
+            s, n_live = straggler_tolerant_sum({"g": x}, a, ctx, wf)
+            return s["g"], n_live
+
+        return coll.vmap_workers(worker, in_axes=(0, 0))(payload, alive)
+
+    s, n_live = run(ints)
+    expect = np.asarray(ints)[np.asarray(alive)].sum(0)
+    np.testing.assert_array_equal(np.asarray(s[0]), expect)
+    assert int(n_live[0]) == 3
+    # property: replacing the dead worker's payload with anything in range
+    # changes NOTHING on the decoded side
+    garbage = ints.at[2].set(
+        jax.random.randint(jax.random.fold_in(key, 1), (257,), -lim, lim + 1)
+    )
+    s2, _ = run(garbage)
+    np.testing.assert_array_equal(np.asarray(s2[0]), expect)
+
+
+def test_straggler_dense_packed_parity():
+    """dense8 and packed8 agree bit-exactly on the partial sum (shared §5.1
+    integer image; only the transport words differ)."""
+    n = 4
+    ctx = CommCtx(axes=(coll.WORKER_AXIS,), axis_sizes=(n,))
+    lim = PackedInt(bits=8).clip_limit(n)
+    ints = jax.random.randint(jax.random.PRNGKey(3), (n, 301), -lim, lim + 1)
+    alive = jnp.array([True, False, True, True])
+
+    def run(wf):
+        def worker(x, a):
+            s, n_live = straggler_tolerant_sum({"g": x}, a, ctx, wf)
+            return s["g"], n_live
+
+        return coll.vmap_workers(worker, in_axes=(0, 0))(ints, alive)
+
+    s_d, nl_d = run(DenseInt(bits=8))
+    s_p, nl_p = run(PackedInt(bits=8))
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_p))
+    np.testing.assert_array_equal(np.asarray(nl_d), np.asarray(nl_p))
+
+
+def test_decode_partial_alpha_tree_and_all_dead_flag():
+    """decode_partial takes IntSGD's per-leaf α tree (Algorithm 2) and flags
+    the all-workers-dead round instead of silently decoding zeros."""
+    int_sum = {"a": jnp.array([6, -4], jnp.int32), "b": jnp.array([9], jnp.int32)}
+    alphas = {"a": jnp.float32(2.0), "b": jnp.float32(3.0)}
+    ghat, all_dead = decode_partial(int_sum, alphas, jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(ghat["a"]), [1.0, -2.0 / 3.0], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ghat["b"]), [1.0], rtol=1e-6)
+    assert not bool(all_dead)
+    # scalar α still broadcasts
+    ghat_s, _ = decode_partial(int_sum, jnp.float32(2.0), jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(ghat_s["b"]), [1.5], rtol=1e-6)
+    # n_live == 0: finite output, loud flag
+    ghat0, dead0 = decode_partial(int_sum, alphas, jnp.int32(0))
+    assert bool(dead0)
+    assert np.all(np.isfinite(np.asarray(ghat0["a"])))
+
+
+@pytest.mark.slow
+def test_straggler_mesh_packed8():
+    """Straggler sum over the REAL 4-device mesh: packed8 and dense8 wires
+    agree bit-exactly with one dead worker, and the decode matches numpy."""
+    out = run_forced_mesh(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.comm import CommCtx
+from repro.parallel.collectives import shard_map
+from repro.runtime.straggler import straggler_tolerant_sum, decode_partial
+from repro.wire import DenseInt, PackedInt
+
+n = 4
+mesh = jax.make_mesh((n,), ("data",))
+ctx = CommCtx(axes=("data",), axis_sizes=(n,))
+lim = PackedInt(bits=8).clip_limit(n)
+key = jax.random.PRNGKey(0)
+ints = {"w": jax.random.randint(key, (n, 300), -lim, lim + 1),
+        "b": jax.random.randint(jax.random.fold_in(key, 1), (n, 7), -lim, lim + 1)}
+alive = jnp.array([True, True, False, True])
+
+def run(wf):
+    def body(t, a):
+        t1 = jax.tree.map(lambda v: v[0], t)
+        s, n_live = straggler_tolerant_sum(t1, a[0], ctx, wf)
+        return s, n_live
+    f = jax.jit(shard_map(body, mesh=mesh,
+        in_specs=({"w": P("data"), "b": P("data")}, P("data")),
+        out_specs=({"w": P(), "b": P()}, P()), check_vma=False))
+    return f(ints, alive)
+
+s_p, nl = run(PackedInt(bits=8))
+s_d, _ = run(DenseInt(bits=8))
+mask = np.asarray(alive)
+for k in ints:
+    expect = np.asarray(ints[k])[mask].sum(0)
+    np.testing.assert_array_equal(np.asarray(s_p[k]), expect)
+    np.testing.assert_array_equal(np.asarray(s_d[k]), np.asarray(s_p[k]))
+assert int(nl) == 3
+alphas = {"w": jnp.float32(2.0), "b": jnp.float32(4.0)}
+ghat, all_dead = decode_partial(s_p, alphas, nl)
+np.testing.assert_allclose(np.asarray(ghat["w"]),
+    np.asarray(ints["w"])[mask].sum(0) / (3 * 2.0), rtol=1e-6)
+assert not bool(all_dead)
+print("STRAGGLER_MESH_OK")
+"""
+    )
+    assert "STRAGGLER_MESH_OK" in out
 
 
 def test_failure_recovery_end_to_end(tmp_path):
