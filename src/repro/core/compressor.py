@@ -107,6 +107,19 @@ class Metrics:
 class Compressor:
     supports_allreduce: ClassVar[bool] = True
     name: ClassVar[str] = "base"
+    # --- fused/wire-level capability (the compressor half of the fused-route
+    # contract; the optimizer half is Optimizer.fused_kernel) ----------------
+    # fused_capable: the compressor exposes its aggregation at WIRE level —
+    # ``encode_ints`` (per-image encode, microbatch pipelining),
+    # ``aggregate_wire`` (encode+reduce without decoding, the fused Pallas
+    # entry), ``finish_pipelined`` (decode + state advance of accumulated
+    # images) and the shift hooks below. launch/step.py routes the fused
+    # update AND the microbatch wire pipelining on this flag alone.
+    fused_capable: ClassVar[bool] = False
+    # fused_local_state: state updates consume the LOCAL integer image
+    # (IntDIANA's h_local); the pipelined train body accumulates it only
+    # when this is set.
+    fused_local_state: ClassVar[bool] = False
 
     def init(self, params) -> Any:
         return ()
@@ -118,6 +131,17 @@ class Compressor:
 
     def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
         raise NotImplementedError
+
+    # --- fused-route shift hooks (no-ops unless the compressor carries a
+    # replicated shift the decode must add, like IntDIANA's h_global) -------
+    def fused_shift(self, state):
+        """Replicated global-shift tree the fused kernel adds to the decoded
+        aggregate (g = shift + Σints/(nα)), or None."""
+        return None
+
+    def fused_store_shift(self, state, new_shift):
+        """Fold the kernel's emitted shift output back into the state."""
+        return state
 
 
 # --------------------------------------------------------------------------
@@ -157,6 +181,7 @@ class IntSGD(Compressor):
     """
 
     name: ClassVar[str] = "intsgd"
+    fused_capable: ClassVar[bool] = True
     alpha_rule: AlphaRule = AlphaMovingAvg()
     bits: int = 32
     stochastic: bool = True
@@ -260,6 +285,25 @@ class IntSGD(Compressor):
             lambda s, a: wf.decode(s, a, n_workers=ctx.n), wa.ints, alphas
         )
         return ghat, state, metrics
+
+    def finish_pipelined(
+        self, state, int_sum_acc, local_int_acc, alphas, *, ctx: CommCtx,
+        n_accum: int,
+    ):
+        """Decode the n_accum accumulated summed images of the microbatch-
+        pipelined train body: ĝ = (1/(n·M·α)) Σ_m Σ_i Int(α g_i^m). The
+        per-image clip (``encode_ints(n_accum=M)``) guarantees the int32
+        accumulator never wrapped. IntSGD carries no wire-level state, so
+        ``local_int_acc`` (None here — fused_local_state is False) is
+        unused and the state passes through."""
+        del local_int_acc
+        wf = self.wire_format
+        ghat = jax.tree.map(
+            lambda s, a: wf.decode(s, a, n_workers=ctx.n * n_accum),
+            int_sum_acc,
+            alphas,
+        )
+        return ghat, state
 
 
 # --------------------------------------------------------------------------
@@ -633,9 +677,19 @@ class IntDIANA(Compressor):
     across the data axes — in the distributed runtime it is per-device state);
     the global shift h is replicated. Fixes the heterogeneous-data max-int
     blowup of plain IntSGD (Appendix A.2, Fig. 6).
+
+    Wire-level split (fused_capable): ``aggregate_wire`` encodes the
+    difference image Int(α(g_i - h_i)), advances h_local off that LOCAL
+    image and reduces — WITHOUT decoding or touching h_global. The decode
+    ĝ = h_global + (1/(nα))Σints then happens either here (``aggregate``) or
+    inside the fused Pallas kernel, which takes h_global as its ``shift``
+    input and emits the new h_global (= ĝ) alongside p'/moments in the same
+    HBM pass (``fused_shift`` / ``fused_store_shift``).
     """
 
     name: ClassVar[str] = "intdiana"
+    fused_capable: ClassVar[bool] = True
+    fused_local_state: ClassVar[bool] = True  # h_local reads the local image
     alpha_rule: AlphaRule = AlphaDiana()
     bits: int = 32
     stochastic: bool = True
@@ -656,36 +710,104 @@ class IntDIANA(Compressor):
     def observe_update(self, state, dx_stats: DxStats):
         return dict(state, alpha=self.alpha_rule.update(state["alpha"], dx_stats))
 
-    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+    def _alphas(self, state, grads, eta, n, dims: TreeDims | None):
+        d = dims.d if dims is not None else tree_size(grads)
+        a_scalar = self.alpha_rule.alpha(state["alpha"], eta, n, d)
+        return jax.tree.map(lambda _: a_scalar, grads)
+
+    def encode_ints(
+        self, state, grads, *, key, eta, ctx: CommCtx, dims=None,
+        n_accum: int = 1,
+    ):
+        """One worker's difference image Int(α(g - h_i)) and the α tree.
+        Every image carries the FULL local shift: with ``n_accum=M``
+        (microbatch pipelining) the accumulated sum is
+        Σ_m Int(α(g^m - h_i)) ≈ α(Σ_m g^m - M·h_i), so the 1/(n·M·α)
+        decode recovers ḡ - h̄ exactly as the single-shot round does —
+        diluting the shift per image (h_i/M) would leave an h̄·(1-1/M)
+        bias in ĝ and drift h_local toward M·ḡ. The clip tightens to the
+        full n·M sum exactly as for IntSGD. h_local is NOT advanced here —
+        that happens in ``aggregate_wire`` (single-shot) or
+        ``finish_pipelined`` (accumulated), off the same integer
+        image(s)."""
         n = ctx.n
         wf = self.wire_format
-        d = dims.d if dims is not None else tree_size(grads)
-        alpha = self.alpha_rule.alpha(state["alpha"], eta, n, d)
+        alphas = self._alphas(state, grads, eta, n, dims)
         akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
-        diff = jax.tree.map(lambda g, h: g.astype(jnp.float32) - h, grads, state["h_local"])
         ints = jax.tree.map(
-            lambda x, k: wf.encode(
-                x, alpha, k, n_workers=n, stochastic=self.stochastic
+            lambda g, h, a, k: wf.encode(
+                g.astype(jnp.float32) - h, a, k,
+                n_workers=n * n_accum, stochastic=self.stochastic,
             ),
-            diff,
+            grads,
+            state["h_local"],
+            alphas,
             akeys,
+        )
+        return ints, alphas
+
+    def aggregate_wire(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        """Encode + h_local advance + integer all-reduce, no decode: the
+        fused-route entry point (launch/step.py feeds the returned words and
+        ``fused_shift(state)`` to the Pallas kernel)."""
+        n = ctx.n
+        wf = self.wire_format
+        ints, alphas = self.encode_ints(
+            state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
         max_local = lax.pmax(tree_abs_max(ints), ctx.axes)
         # local shift: h_i += Q(g_i - h_i) = (1/α) Int(α (g_i - h_i))
-        q_local = jax.tree.map(lambda s: s.astype(jnp.float32) / alpha, ints)
-        h_local = jax.tree.map(jnp.add, state["h_local"], q_local)
-        _, int_sum = ctx.psum_wire(ints, wf)
-        mean_q = jax.tree.map(
-            lambda s: wf.decode(s, alpha, n_workers=n), int_sum
+        h_local = jax.tree.map(
+            lambda h, s, a: h + s.astype(jnp.float32) / a,
+            state["h_local"], ints, alphas,
         )
-        ghat = jax.tree.map(jnp.add, state["h_global"], mean_q)
-        h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
+        words_sum, int_sum = ctx.psum_wire(ints, wf)
         max_int = tree_abs_max(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
-        new_state = dict(state, h_local=h_local, h_global=h_global)
-        return ghat, new_state, Metrics(
-            max_int, bits, _payload_bytes(wf, grads), max_local
+        return (
+            WireAggregate(words=words_sum, ints=int_sum),
+            alphas,
+            dict(state, h_local=h_local),
+            Metrics(max_int, bits, _payload_bytes(wf, grads), max_local),
         )
+
+    def aggregate(self, state, grads, *, key, eta, ctx: CommCtx, dims=None):
+        wa, alphas, state, metrics = self.aggregate_wire(
+            state, grads, key=key, eta=eta, ctx=ctx, dims=dims
+        )
+        wf = self.wire_format
+        mean_q = jax.tree.map(
+            lambda s, a: wf.decode(s, a, n_workers=ctx.n), wa.ints, alphas
+        )
+        h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
+        # ĝ = h + mean Q(g_i - h_i) == the advanced global shift
+        return h_global, dict(state, h_global=h_global), metrics
+
+    def finish_pipelined(
+        self, state, int_sum_acc, local_int_acc, alphas, *, ctx: CommCtx,
+        n_accum: int,
+    ):
+        """Accumulated-image decode + shift advance:
+        mean_q = (1/(n·M·α)) ΣΣ ints, h_i += (1/(M·α)) Σ_m ints_i^m,
+        ĝ = h_global + mean_q (= new h_global)."""
+        wf = self.wire_format
+        h_local = jax.tree.map(
+            lambda h, s, a: h + s.astype(jnp.float32) / (n_accum * a),
+            state["h_local"], local_int_acc, alphas,
+        )
+        mean_q = jax.tree.map(
+            lambda s, a: wf.decode(s, a, n_workers=ctx.n * n_accum),
+            int_sum_acc,
+            alphas,
+        )
+        h_global = jax.tree.map(jnp.add, state["h_global"], mean_q)
+        return h_global, dict(state, h_local=h_local, h_global=h_global)
+
+    def fused_shift(self, state):
+        return state["h_global"]
+
+    def fused_store_shift(self, state, new_shift):
+        return dict(state, h_global=new_shift)
 
 
 # --------------------------------------------------------------------------

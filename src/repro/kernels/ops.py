@@ -143,6 +143,99 @@ def unpack_words(
 
 
 @functools.partial(
+    jax.jit,
+    static_argnames=("kernel", "bits", "n_summed", "interpret"),
+)
+def fused_unpack_apply(
+    words: jax.Array,
+    param: jax.Array,
+    opt: tuple,  # per-kernel f32 state tensors, param-shaped
+    scalars: jax.Array,  # canonical vector (see kernels/fused_update.py)
+    shift: jax.Array | None = None,
+    *,
+    kernel: str = "sgd",
+    bits: int,
+    n_summed: int,
+    interpret: bool | None = None,
+):
+    """PackedInt fused route, any optimizer kernel: the update consumes the
+    bit-packed transport words directly (no unpacked integer image ever hits
+    HBM). Returns (param', opt', shift'|None)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    k = 32 // bits
+    nlim = n_summed * _ic.clip_limit(bits, n_summed)
+    shape, d = param.shape, param.size
+    m = words.size
+    assert m == -(-d // k), (m, d, k)
+    block = _block_for(m)
+    w2 = _to_2d(words.reshape(-1), block)
+
+    def view(t):
+        flat = t.reshape(-1).astype(jnp.float32)
+        return _image_view(jnp.pad(flat, (0, k * m - d)), k, m, block)
+
+    po3, opt3, ho3 = _fu.fused_unpack_apply_2d(
+        w2, view(param), tuple(view(o) for o in opt), scalars,
+        None if shift is None else view(shift),
+        kernel=kernel, bits=bits, nlim=nlim, block=block,
+        interpret=interpret,
+    )
+
+    def unview(t, dt):
+        flat = t.reshape(k, -1)[:, :m].reshape(-1)[:d]
+        return flat.reshape(shape).astype(dt)
+
+    return (
+        unview(po3, param.dtype),
+        tuple(unview(o3, o.dtype) for o3, o in zip(opt3, opt)),
+        None if ho3 is None else unview(ho3, shift.dtype),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "interpret"))
+def fused_apply(
+    int_sum: jax.Array,
+    param: jax.Array,
+    opt: tuple,
+    scalars: jax.Array,
+    shift: jax.Array | None = None,
+    *,
+    kernel: str = "sgd",
+    interpret: bool | None = None,
+):
+    """Dense fused route, any optimizer kernel: optimizer step fused with
+    integer dequantization. Returns (param', opt', shift'|None)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = param.shape
+    block = _block_for(param.size)
+    to2 = lambda t: _to_2d(t.reshape(-1).astype(jnp.float32), block)
+    po, opt2, ho = _fu.fused_apply_2d(
+        _to_2d(int_sum.reshape(-1), block), to2(param),
+        tuple(to2(o) for o in opt), scalars,
+        None if shift is None else to2(shift),
+        kernel=kernel, block=block, interpret=interpret,
+    )
+    unpad = lambda a, dt: a.reshape(-1)[: param.size].reshape(shape).astype(dt)
+    return (
+        unpad(po, param.dtype),
+        tuple(unpad(o2, o.dtype) for o2, o in zip(opt2, opt)),
+        None if ho is None else unpad(ho, shift.dtype),
+    )
+
+
+def _sgd_scalars(inv_nalpha, lr, mu, wd):
+    return jnp.stack(
+        [
+            jnp.asarray(inv_nalpha, jnp.float32),
+            jnp.float32(1.0),  # clip
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(mu, jnp.float32),
+            jnp.asarray(wd, jnp.float32),
+        ]
+    )
+
+
+@functools.partial(
     jax.jit, static_argnames=("bits", "n_summed", "interpret")
 )
 def fused_unpack_update(
@@ -158,39 +251,12 @@ def fused_unpack_update(
     n_summed: int,
     interpret: bool | None = None,
 ):
-    """PackedInt fused route: momentum-SGD step consuming the bit-packed
-    transport words directly (no unpacked integer image ever hits HBM)."""
-    interpret = _interpret_default() if interpret is None else interpret
-    k = 32 // bits
-    nlim = n_summed * _ic.clip_limit(bits, n_summed)
-    shape, d = param.shape, param.size
-    m = words.size
-    assert m == -(-d // k), (m, d, k)
-    block = _block_for(m)
-    w2 = _to_2d(words.reshape(-1), block)
-
-    def view(t):
-        flat = t.reshape(-1).astype(jnp.float32)
-        return _image_view(jnp.pad(flat, (0, k * m - d)), k, m, block)
-
-    scalars = jnp.stack(
-        [
-            jnp.asarray(inv_nalpha, jnp.float32),
-            jnp.asarray(lr, jnp.float32),
-            jnp.asarray(mu, jnp.float32),
-            jnp.asarray(wd, jnp.float32),
-        ]
+    """Momentum-SGD shorthand over :func:`fused_unpack_apply`."""
+    p, (m,), _ = fused_unpack_apply(
+        words, param, (mom,), _sgd_scalars(inv_nalpha, lr, mu, wd),
+        kernel="sgd", bits=bits, n_summed=n_summed, interpret=interpret,
     )
-    po3, mo3 = _fu.fused_unpack_update_2d(
-        w2, view(param), view(mom), scalars,
-        bits=bits, nlim=nlim, block=block, interpret=interpret,
-    )
-
-    def unview(t, dt):
-        flat = t.reshape(k, -1)[:, :m].reshape(-1)[:d]
-        return flat.reshape(shape).astype(dt)
-
-    return unview(po3, param.dtype), unview(mo3, mom.dtype)
+    return p, m
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -206,23 +272,11 @@ def fused_update(
     interpret: bool | None = None,
 ):
     """p', m' = sgd-with-momentum step fused with integer dequantization."""
-    interpret = _interpret_default() if interpret is None else interpret
-    shape = param.shape
-    block = _block_for(param.size)
-    ints2 = _to_2d(int_sum.reshape(-1), block)
-    p2 = _to_2d(param.reshape(-1).astype(jnp.float32), block)
-    m2 = _to_2d(mom.reshape(-1).astype(jnp.float32), block)
-    scalars = jnp.stack(
-        [
-            jnp.asarray(inv_nalpha, jnp.float32),
-            jnp.asarray(lr, jnp.float32),
-            jnp.asarray(mu, jnp.float32),
-            jnp.asarray(wd, jnp.float32),
-        ]
+    p, (m,), _ = fused_apply(
+        int_sum, param, (mom,), _sgd_scalars(inv_nalpha, lr, mu, wd),
+        kernel="sgd", interpret=interpret,
     )
-    po, mo = _fu.fused_update_2d(ints2, p2, m2, scalars, block=block, interpret=interpret)
-    unpad = lambda a, dt: a.reshape(-1)[: param.size].reshape(shape).astype(dt)
-    return unpad(po, param.dtype), unpad(mo, mom.dtype)
+    return p, m
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -122,6 +122,56 @@ def fused_update_ref(
     return new_p.astype(param.dtype), new_m.astype(mom.dtype)
 
 
+def fused_adamw_ref(
+    int_sum: jnp.ndarray,
+    param: jnp.ndarray,
+    mu: jnp.ndarray,
+    nu: jnp.ndarray,
+    *,
+    inv_nalpha,
+    lr,
+    b1,
+    b2,
+    eps,
+    wd,
+    bc1,
+    bc2,
+    clip=1.0,
+    shift: jnp.ndarray | None = None,
+):
+    """Dequantize (+ global shift) + bias-corrected AdamW step.
+
+    Mirrors the fused kernels' arithmetic: g_agg = shift + Σints/(nα) is
+    what the new global shift would be (IntDIANA); the update consumes
+    clip·g_agg. Returns (p', mu', nu', g_agg)."""
+    g_agg = int_sum.astype(jnp.float32) * inv_nalpha
+    if shift is not None:
+        g_agg = g_agg + shift.astype(jnp.float32)
+    g = clip * g_agg
+    p32 = param.astype(jnp.float32)
+    new_m = b1 * mu.astype(jnp.float32) + (1.0 - b1) * g
+    new_v = b2 * nu.astype(jnp.float32) + (1.0 - b2) * g * g
+    step = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    new_p = p32 - lr * (step + wd * p32)
+    return (
+        new_p.astype(param.dtype),
+        new_m.astype(mu.dtype),
+        new_v.astype(nu.dtype),
+        g_agg,
+    )
+
+
+def fused_unpack_adamw_ref(
+    words: jnp.ndarray, param: jnp.ndarray, mu: jnp.ndarray, nu: jnp.ndarray,
+    *, bits: int, n_summed: int, **kw
+):
+    """unpack_words_ref composed with fused_adamw_ref."""
+    int_sum = unpack_words_ref(
+        words, param.shape, bits=bits, n_summed=n_summed
+    )
+    return fused_adamw_ref(int_sum, param, mu, nu, **kw)
+
+
 def block_norms_ref(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
     """Squared L2 norm of each contiguous row-block of a 2-D array."""
     rows = x.shape[0]

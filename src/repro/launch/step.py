@@ -15,10 +15,14 @@ style, replication checks disabled):
   * optimizer update, routed one of two ways:
       - "zero1": ZeRO-1 update on dp-sharded f32 masters, bf16 param
         all-gather (the default);
-      - "fused": the Pallas decode+SGD kernel — integer dequantization
-        folded into the momentum-SGD update, one HBM pass, params updated in
-        place of a master copy; consumes the codec's transport words
-        directly (packed words are unpacked in-register, never in HBM).
+      - "fused": the Pallas decode+update kernel family — integer
+        dequantization folded into the optimizer step (momentum-SGD or
+        bias-corrected AdamW, plus the IntDIANA global-shift add/advance),
+        one HBM pass, params updated in place of a master copy; consumes
+        the codec's transport words directly (packed words are unpacked
+        in-register, never in HBM). Routed by capability
+        (Compressor.fused_capable × Optimizer.fused_kernel), never by
+        concrete type — see _fused_plan.
 
   * wire transport is either one monolithic psum (``overlap="off"``, the
     serial reference) or bucketed ``lax.ppermute`` rings
@@ -50,7 +54,6 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.comm import CommCtx
 from repro.core.compressor import (
     Compressor,
-    IntSGD,
     aggregate_exact,
     with_wire,
 )
@@ -64,6 +67,7 @@ from repro.models.encdec import (
     encode as encdec_encode,
 )
 from repro.models.transformer import lm_forward, lm_logits_local, lm_loss
+from repro.optim import base as optb
 from repro.optim.base import Optimizer
 from repro.optim.zero1 import zero1_init, zero1_state_specs, zero1_update
 from repro.parallel import collectives as coll
@@ -154,6 +158,29 @@ def _comp_state_shapes(comp: Compressor, cfg, tp, n_dp):
 
 def _loss_fn_for(cfg: ModelConfig):
     return encdec_loss if cfg.family == "encdec" else lm_loss
+
+
+def _fused_state_struct(base_opt: Optimizer, shapes):
+    """ShapeDtypeStructs of the fused-route optimizer state for ``shapes``
+    (f32 tensor per param per FUSED_STATE_TENSORS entry + int32 scalars)."""
+    kern = base_opt.fused_kernel
+    st = {
+        nm: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), shapes
+        )
+        for nm in optb.FUSED_STATE_TENSORS[kern]
+    }
+    for nm in optb.FUSED_STATE_SCALARS[kern]:
+        st[nm] = jax.ShapeDtypeStruct((), jnp.int32)
+    return st
+
+
+def _fused_state_specs(base_opt: Optimizer, pspecs):
+    kern = base_opt.fused_kernel
+    specs = {nm: pspecs for nm in optb.FUSED_STATE_TENSORS[kern]}
+    for nm in optb.FUSED_STATE_SCALARS[kern]:
+        specs[nm] = P()
+    return specs
 
 
 # ---------------------------------------------------------------------------
@@ -287,38 +314,55 @@ def _observe_dx(layout: Layout, compressor, base_opt, cs, new_params, params):
     )
 
 
-def _fused_sgd_hyper(base_opt: Optimizer, compressor: Compressor):
-    """Validate + extract (μ, wd) for the fused decode+SGD kernel route."""
-    if not isinstance(compressor, IntSGD):
+def _fused_plan(base_opt: Optimizer, compressor: Compressor) -> str:
+    """Validate the (compressor × optimizer) pair against the fused-route
+    capability contract and return the kernel name. No type-gates: the
+    compressor advertises wire-level aggregation via ``fused_capable``, the
+    optimizer its Pallas decode+update kernel via ``Optimizer.fused_kernel``
+    — any capable pair routes, any other names the missing capability."""
+    if not getattr(compressor, "fused_capable", False):
         raise ValueError(
-            "fused update routing needs an integer wire (IntSGD family); got "
-            f"{type(compressor).__name__}"
+            "fused update routing consumes the summed transport words "
+            "directly, which needs wire-level aggregation "
+            f"(Compressor.fused_capable); compressor {compressor.name!r} "
+            "does not advertise it — use an integer-wire compressor or "
+            "fused=False"
         )
-    if base_opt.kind != "sgd" or base_opt.hyper is None:
+    if base_opt.fused_kernel is None or base_opt.hyper is None:
         raise ValueError(
-            "fused update routing fuses dequantize+momentum-SGD; base_opt "
-            f"must be optim.sgd (got kind={base_opt.kind!r})"
+            "fused update routing needs an optimizer exposing a fused "
+            "decode+update kernel (Optimizer.fused_kernel); "
+            f"kind={base_opt.kind!r} advertises none — use optim.sgd "
+            "(heavy-ball) or optim.adamw, or fused=False"
         )
-    if base_opt.hyper.get("nesterov"):
-        raise ValueError("fused update routing does not support nesterov")
-    return float(base_opt.hyper["momentum"]), float(
-        base_opt.hyper["weight_decay"]
-    )
+    return base_opt.fused_kernel
 
 
 def _clip_factor(layout: Layout, clip_norm, *, ghat=None, int_sum=None,
-                 alphas=None):
+                 alphas=None, shift=None):
     """Global-norm gradient clip factor min(1, c/||ĝ||). For the fused
     integer route ||ĝ||² is computed straight off the wire payload
-    (||ĝ_l||² = ||Σints_l||²/(nα_l)²) so ĝ is never materialized."""
+    (||ĝ_l||² = ||Σints_l||²/(nα_l)², plus the replicated shift h for the
+    IntDIANA decode ĝ = h + Σints/(nα)) so ĝ is never materialized — the
+    elementwise add fuses into the reduction."""
     if int_sum is not None:
         n = layout.ctx.n
-        leaf_sq = jax.tree.map(
-            lambda s, a: jnp.sum(jnp.square(s.astype(jnp.float32)))
-            / jnp.square(n * a),
-            int_sum,
-            alphas,
-        )
+        if shift is None:
+            leaf_sq = jax.tree.map(
+                lambda s, a: jnp.sum(jnp.square(s.astype(jnp.float32)))
+                / jnp.square(n * a),
+                int_sum,
+                alphas,
+            )
+        else:
+            leaf_sq = jax.tree.map(
+                lambda s, a, h: jnp.sum(
+                    jnp.square(h + s.astype(jnp.float32) / (n * a))
+                ),
+                int_sum,
+                alphas,
+                shift,
+            )
     else:
         leaf_sq = jax.tree.map(
             lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), ghat
@@ -337,8 +381,8 @@ def _microbatch(batch, m: int, n_micro: int):
 
 
 def _pipelined_grad_stage(
-    layout: Layout, loss_fn, compressor: IntSGD, cs, params, batch, akey, eta,
-    n_micro: int,
+    layout: Layout, loss_fn, compressor: Compressor, cs, params, batch, akey,
+    eta, n_micro: int,
 ):
     """Microbatch/grad-accum wire pipelining: encode microbatch i's integer
     image and LAUNCH its (bucketed) all-reduce immediately, then start
@@ -353,14 +397,18 @@ def _pipelined_grad_stage(
 
         ghat = (1/(n·M·α)) Σ_m Σ_i Int(α g_i^m)
 
-    is the mean of M independent IntSGD estimates — the same estimator
-    whether the transport is the serial psum or the bucketed rings (parity
-    is pinned by tests/test_overlap.py)."""
-    n = layout.ctx.n
+    is the mean of M independent estimates (for IntDIANA each image carries
+    the difference g^m - h_i/M, so the mean estimates g - h_i) — the same
+    estimator whether the transport is the serial psum or the bucketed
+    rings (parity is pinned by tests/test_overlap.py). Decode + compressor
+    state advance happen in ``compressor.finish_pipelined``; compressors
+    whose state reads the LOCAL integer image (``fused_local_state``, e.g.
+    IntDIANA's h_local) get the local accumulation too."""
+    track_local = compressor.fused_local_state
     wf = compressor.wire_format
     loss_acc = jnp.zeros(())
     max_int = jnp.zeros(())
-    int_acc = alphas = None
+    int_acc = local_acc = alphas = None
     for m in range(n_micro):
         mb = _microbatch(batch, m, n_micro)
         loss_m, grads_m = _forward_backward(layout, loss_fn, params, mb)
@@ -368,6 +416,11 @@ def _pipelined_grad_stage(
             cs, grads_m, key=jax.random.fold_in(akey, m), eta=eta,
             ctx=layout.ctx, dims=layout.dims, n_accum=n_micro,
         )
+        if track_local:
+            local_acc = (
+                ints_m if local_acc is None
+                else jax.tree.map(jnp.add, local_acc, ints_m)
+            )
         # the reduce of image m is issued HERE, before backward of m+1 —
         # no result of it is needed until the decode after the loop
         _, int_sum_m = layout.ctx.psum_wire(ints_m, wf)
@@ -379,11 +432,11 @@ def _pipelined_grad_stage(
         # M-fold accumulated sum
         max_int = jnp.maximum(max_int, tree_abs_max(int_sum_m))
         loss_acc = loss_acc + loss_m
-    ghat = jax.tree.map(
-        lambda s, a: wf.decode(s, a, n_workers=n * n_micro), int_acc, alphas
+    ghat, cs = compressor.finish_pipelined(
+        cs, int_acc, local_acc, alphas, ctx=layout.ctx, n_accum=n_micro
     )
     bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
-    return ghat, loss_acc / n_micro, (max_int, bits)
+    return ghat, cs, loss_acc / n_micro, (max_int, bits)
 
 
 def _accum_grad_stage(layout: Layout, loss_fn, params, batch, n_micro: int):
@@ -418,8 +471,12 @@ def _make_train_body(
     optimizer, fused-kernel routing, clipping, microbatch pipelining). All
     jitted train variants are built from it."""
     if update_route == "fused":
-        mu, wd = _fused_sgd_hyper(base_opt, compressor)
-    pipelined = microbatches > 1 and isinstance(compressor, IntSGD)
+        _fused_plan(base_opt, compressor)
+    # the microbatch wire pipelining rides the SAME capability as the fused
+    # route: compressors advertising wire-level aggregation (encode_ints /
+    # finish_pipelined) pipeline their integer images; everything else gets
+    # plain f32 gradient accumulation
+    pipelined = microbatches > 1 and compressor.fused_capable
 
     def step(params, opt_state, comp_state, step_idx, key, batch):
         eta = lr_schedule(step_idx)
@@ -428,7 +485,7 @@ def _make_train_body(
         akey = jax.random.fold_in(key, 1)
         m_axes = layout.dp + (("model",) if layout.tp > 1 else ())
         if not exact and pipelined:
-            ghat, loss, (max_int, bits) = _pipelined_grad_stage(
+            ghat, cs, loss, (max_int, bits) = _pipelined_grad_stage(
                 layout, loss_fn, compressor, cs, params, batch, akey, eta,
                 microbatches,
             )
@@ -460,22 +517,30 @@ def _make_train_body(
                     lax.pmax(m.bits_per_coord, m_axes),
                 )
 
+        # replicated global shift the fused decode must add (IntDIANA's
+        # h_global; None for shift-free compressors)
+        shift = compressor.fused_shift(cs) if wa is not None else None
+        clip_scale = jnp.float32(1.0)
         if clip_norm is not None:
             scale = _clip_factor(
                 layout, clip_norm, ghat=ghat,
                 int_sum=None if wa is None else wa.ints, alphas=alphas,
+                shift=shift,
             )
             if ghat is not None:
                 ghat = jax.tree.map(lambda g: g * scale, ghat)
-            else:  # fused: fold the clip into the dequantization scalar
-                alphas = jax.tree.map(lambda a: a / scale, alphas)
+            else:  # fused: the clip rides the kernels' scalar vector
+                clip_scale = scale
 
         if update_route == "fused":
-            new_params, new_opt = _fused_update_stage(
-                layout, params, opt_state, eta, mu, wd,
+            new_params, new_opt, new_shift = _fused_update_stage(
+                layout, params, opt_state, eta, base_opt,
                 ghat=ghat, wire_agg=wa, alphas=alphas,
-                wf=compressor.wire_format,
+                wf=compressor.wire_format, clip_scale=clip_scale,
+                shift=shift,
             )
+            if new_shift is not None:
+                cs = compressor.fused_store_shift(cs, new_shift)
         else:
             new_params, new_opt = zero1_update(
                 base_opt,
@@ -496,36 +561,61 @@ def _make_train_body(
     return step
 
 
-def _fused_update_stage(layout: Layout, params, opt_state, eta, mu, wd, *,
-                        ghat, wire_agg, alphas, wf):
-    """Pallas fused dequantize+momentum+SGD route: one HBM pass per leaf,
+def _fused_update_stage(layout: Layout, params, opt_state, eta,
+                        base_opt: Optimizer, *, ghat, wire_agg, alphas, wf,
+                        clip_scale, shift):
+    """Pallas fused dequantize+optimizer route: one HBM pass per leaf,
     params updated directly (no ZeRO master shard). The update consumes the
     summed TRANSPORT WORDS exactly as they left the all-reduce — for the
     packed codec the integer image is never materialized; the kernel unpacks
-    fields in-register (wf.fused_update dispatch). The exact (step-0) path
-    has no integer payload and runs the same arithmetic unfused."""
-    mom = opt_state["mom"]
+    fields in-register (wf.fused_update dispatch on
+    ``base_opt.fused_kernel``). With a shift tree (IntDIANA) the kernel also
+    emits the advanced global shift in the same pass. The exact (step-0)
+    path has no integer payload and runs the same arithmetic unfused
+    (optim.base.fused_reference_update).
+
+    Returns ``(new_params, new_opt_state, new_shift | None)``."""
     if wire_agg is None:  # exact aggregation path
-        def leaf(p, m, g):
-            p32 = p.astype(jnp.float32)
-            g32 = g.astype(jnp.float32) + wd * p32
-            m32 = mu * m + g32
-            return (p32 - eta * m32).astype(p.dtype), m32
+        new_params, new_opt = optb.fused_reference_update(
+            base_opt, ghat, params, opt_state, eta
+        )
+        return new_params, new_opt, None
 
-        outs = jax.tree.map(leaf, params, mom, ghat)
-    else:
-        n = layout.ctx.n
+    kern = base_opt.fused_kernel
+    tail, new_scalars = optb.fused_step_scalars(base_opt, opt_state, eta)
+    tensor_names = optb.FUSED_STATE_TENSORS[kern]
+    n = layout.ctx.n
 
-        def leaf(p, m, w, a):
-            return wf.fused_update(
-                w, p, m, 1.0 / (n * a), eta, mu, wd, n_summed=n
-            )
+    p_leaves, treedef = jax.tree.flatten(params)
+    w_leaves = treedef.flatten_up_to(wire_agg.words)
+    a_leaves = treedef.flatten_up_to(alphas)
+    s_leaves = (
+        treedef.flatten_up_to(shift) if shift is not None
+        else [None] * len(p_leaves)
+    )
+    state_leaves = [treedef.flatten_up_to(opt_state[nm]) for nm in tensor_names]
 
-        outs = jax.tree.map(leaf, params, mom, wire_agg.words, alphas)
-    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
-    new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=is_pair)
-    new_mom = jax.tree.map(lambda o: o[1], outs, is_leaf=is_pair)
-    return new_params, {"mom": new_mom}
+    new_p, new_h = [], []
+    new_state = [[] for _ in tensor_names]
+    for i, (p, w, a, h) in enumerate(zip(p_leaves, w_leaves, a_leaves, s_leaves)):
+        scalars = jnp.stack([1.0 / (n * a), clip_scale, *tail])
+        po, oo, ho = wf.fused_update(
+            w, p, tuple(sl[i] for sl in state_leaves), scalars,
+            kernel=kern, n_summed=n, shift=h,
+        )
+        new_p.append(po)
+        new_h.append(ho)
+        for acc, o in zip(new_state, oo):
+            acc.append(o)
+
+    unflat = lambda leaves: jax.tree.unflatten(treedef, leaves)
+    new_opt = {nm: unflat(ls) for nm, ls in zip(tensor_names, new_state)}
+    new_opt.update(new_scalars)
+    return (
+        unflat(new_p),
+        new_opt,
+        unflat(new_h) if shift is not None else None,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -579,15 +669,10 @@ def build_train_step(
     loss_fn = _loss_fn_for(cfg)
 
     if fused:
-        opt_local = {"mom": jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
-            layout.l_shapes,
-        )}
-        opt_global = {"mom": jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
-            layout.g_shapes,
-        )}
-        opt_specs = {"mom": layout.pspecs}
+        _fused_plan(base_opt, compressor)  # fail at build time, not trace
+        opt_local = _fused_state_struct(base_opt, layout.l_shapes)
+        opt_global = _fused_state_struct(base_opt, layout.g_shapes)
+        opt_specs = _fused_state_specs(base_opt, layout.pspecs)
     else:
         opt_local = jax.eval_shape(
             partial(zero1_init, base_opt, n_dp=layout.n_dp), layout.l_shapes
@@ -676,12 +761,11 @@ def build_init_state(
     )
 
     if fused:
-        opt_specs = {"mom": layout.pspecs}
+        _fused_plan(base_opt, compressor)
+        opt_specs = _fused_state_specs(base_opt, layout.pspecs)
 
         def init_fn(params):
-            opt_state = {"mom": jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            )}
+            opt_state = optb.fused_state_init(base_opt, params)
             cs = compressor.init(params)
             cs = jax.tree.map(lambda x: jnp.asarray(x)[None], cs)
             return opt_state, cs

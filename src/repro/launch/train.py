@@ -22,7 +22,7 @@ from repro.core import make_compressor, with_wire
 from repro.data.synthetic import SyntheticLMData
 from repro.launch.step import build_init_state, build_train_step
 from repro.models.transformer import init_lm_params
-from repro.optim import sgd
+from repro.optim import adamw, sgd
 from repro.optim.schedules import constant, warmup_wrap
 from repro.parallel.collectives import mesh_from_counts
 from repro.wire.bucketing import DEFAULT_BUCKET_WORDS
@@ -48,11 +48,16 @@ def train_loop(
     overlap: str = "off",
     bucket_words: int = DEFAULT_BUCKET_WORDS,
     microbatches: int = 1,
+    opt: str = "sgd",
 ):
     comp = make_compressor(compressor)
     if wire is not None:
         comp = with_wire(comp, wire)
-    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    opts = {
+        "sgd": lambda: sgd(momentum=0.9, weight_decay=1e-4),
+        "adamw": lambda: adamw(weight_decay=1e-4),
+    }
+    opt = opts[opt]()
     sched = warmup_wrap(constant(lr), 5)
     art = build_train_step(
         cfg, mesh, shape, compressor=comp, base_opt=opt,
@@ -118,6 +123,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--compressor", default="intsgd")
+    ap.add_argument("--opt", default="sgd", choices=["sgd", "adamw"],
+                    help="base optimizer; both ride the fused Pallas "
+                         "decode+update route under --fused")
     ap.add_argument("--wire", default=None,
                     help="wire codec for the integer gradient transport "
                          "(dense8/dense16/dense32/packed4/packed8/packed16)")
@@ -154,7 +162,7 @@ def main():
         ckpt=ckpt, resume=args.resume, fused=args.fused,
         clip_norm=args.clip_norm, wire=args.wire,
         overlap=args.overlap, bucket_words=args.bucket_words,
-        microbatches=args.microbatches,
+        microbatches=args.microbatches, opt=args.opt,
     )
 
 

@@ -1,8 +1,22 @@
 """AdamW — the production optimizer for the LM-family configs.
 
 IntSGD composes with any server-side optimizer: the compression happens on
-the raw stochastic gradient (the quantity that crosses the wire); Adam moments
-are computed from the decoded aggregate on every worker identically.
+the raw stochastic gradient (the quantity that crosses the wire), and the
+moment state depends on the gradient history only through the decoded
+aggregate. The invariant the routes maintain is that the (mu, nu, count)
+state is bit-identical across update routes — computed from the full
+decoded aggregate on the ZeRO-1 path (each worker holding its own dp
+shard rows of it) and from the in-register decode on the fused Pallas
+path, never from local pre-aggregation gradients (pinned by the fused vs
+unfused moment-parity tests in tests/test_distributed.py).
+
+§4.1 correction: the first moment is an EMA (m = b1·m + (1-b1)·g) whose
+steady state carries the full gradient, so quantization noise injected into
+the applied update is amplified by 1/(1-b1) exactly as heavy-ball momentum
+amplifies it by 1/(1-μ) — hence ``dx_scale = 1-b1``, converting the
+observed ||Δx|| back to the gradient-equivalent units the α rules are
+analyzed for (see optim.base; regression-pinned in tests/test_compressors.py
+alongside the SGD-momentum mirror in tests/test_scaling.py).
 """
 from __future__ import annotations
 
@@ -41,6 +55,8 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: fl
     return Optimizer(
         init=init,
         update=update,
+        dx_scale=1.0 - b1,  # §4.1: the m-EMA amplifies injected noise 1/(1-b1)
         kind="adamw",
         hyper=dict(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay),
+        fused_kernel="adamw",
     )

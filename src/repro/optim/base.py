@@ -12,13 +12,24 @@ learning rate is threaded explicitly because IntSGD's α rule needs η_k.
 displacement the IntSGD α rules are analyzed for (paper §4.1): with heavy-
 ball momentum μ the steady-state update is amplified by 1/(1-μ) relative to
 η·g, and the quantization noise it injects into x is amplified by the same
-factor — so the α rule must see (1-μ)·||Δx||, i.e. dx_scale = 1-μ. Plain
-SGD and scale-free optimizers (Adam) use 1.0. Trainers multiply the DxStats
-fed to ``Compressor.observe_update`` by dx_scale² (see stats.scale_dx_stats).
+factor — so the α rule must see (1-μ)·||Δx||, i.e. dx_scale = 1-μ. The same
+EMA amplification applies to Adam's first moment (m = b1·m + (1-b1)·g with
+the update reading m, not (1-b1)·g): dx_scale = 1-b1. Only genuinely
+memoryless rules (plain SGD) use 1.0. Trainers multiply the DxStats fed to
+``Compressor.observe_update`` by dx_scale² (see stats.scale_dx_stats).
 
-``kind``/``hyper`` expose the update rule's identity to the step-builder
-pipeline so it can route onto fused kernels (kernels/ops.fused_update needs
-(momentum, weight_decay) of a plain SGD rule to fuse decode+update).
+``fused_kernel`` is the optimizer half of the fused-route capability
+contract (the compressor half is ``Compressor.fused_capable``): the name of
+the Pallas fused decode+update kernel this update rule can ride ("sgd" |
+"adamw"), or None when the rule has no fused form (nesterov, custom
+wrappers). ``launch.step`` routes (codec × optimizer) pairs on these two
+capabilities — it never inspects concrete types. The per-kernel state layout
+and scalar schedule live HERE (``FUSED_STATE_TENSORS`` and friends) so the
+step builder and the wire codecs stay kernel-agnostic; the kernels
+themselves live in :mod:`repro.kernels.fused_update`.
+
+``kind``/``hyper`` expose the update rule's identity for logging and for
+the fused-scalar packing below.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ import dataclasses
 from typing import Any, Callable, Mapping, Optional
 
 import jax
+import jax.numpy as jnp
 
 OptState = Any
 
@@ -35,8 +47,9 @@ class Optimizer:
     init: Callable[[Any], OptState]
     update: Callable[..., tuple]  # (grads, state, params, lr) -> (updates, state)
     dx_scale: float = 1.0  # applied-update -> gradient-equivalent factor
-    kind: str = "custom"  # "sgd" | "adamw" | "custom" (fused-kernel routing)
+    kind: str = "custom"  # "sgd" | "adamw" | "custom"
     hyper: Optional[Mapping[str, Any]] = None  # static hyperparameters
+    fused_kernel: Optional[str] = None  # fused decode+update kernel capability
 
 
 def apply_updates(params, updates):
@@ -44,7 +57,11 @@ def apply_updates(params, updates):
 
 
 def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
-    """Gradient clipping wrapper (applied to the aggregated gradient)."""
+    """Gradient clipping wrapper (applied to the aggregated gradient).
+
+    The wrapped update is opaque, so the fused capability does not survive
+    the chain (use build_train_step(clip_norm=...) on the fused route — the
+    clip factor is folded into the kernel's scalar vector there)."""
     import jax.numpy as jnp
 
     from repro.utils.tree import tree_sq_norm
@@ -55,4 +72,115 @@ def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
         grads = jax.tree.map(lambda g: g * scale, grads)
         return opt.update(grads, state, params, lr)
 
-    return dataclasses.replace(opt, update=update, kind="custom")
+    return dataclasses.replace(opt, update=update, kind="custom",
+                               fused_kernel=None)
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel registry: state layout + scalar schedule per kernel name.
+# ONE enumeration, consumed by launch/step.py (state shapes/specs/init) and
+# by the kernel scalar packing — the wire codecs dispatch on the name only.
+# ---------------------------------------------------------------------------
+# per-param f32 state tensors each kernel reads AND writes, in the order the
+# kernel's refs (and its returned tuple) use
+FUSED_STATE_TENSORS = {"sgd": ("mom",), "adamw": ("mu", "nu")}
+# replicated scalar state carried outside the kernels
+FUSED_STATE_SCALARS = {"sgd": (), "adamw": ("count",)}
+# shared scalar tail appended after the per-leaf [inv_nalpha, clip] header;
+# see kernels/fused_update.py for the canonical vectors. omb1/omb2 are
+# (1-b1)/(1-b2) PRE-ROUNDED from the python-float hyperparameters so the
+# kernels multiply by the exact same f32 constants as optim/adamw.py's
+# ``(1 - b1) * g`` — recomputing 1-b1 in f32 inside the kernel is one ULP
+# off, which the bf16 forward amplifies past any ULP-parity tolerance.
+FUSED_SCALAR_TAIL = {
+    "sgd": ("lr", "mu", "wd"),
+    "adamw": ("lr", "b1", "omb1", "b2", "omb2", "eps", "wd", "bc1", "bc2"),
+}
+
+
+def fused_state_init(opt: Optimizer, params):
+    """Zero-initialized fused-route optimizer state for ``opt.fused_kernel``
+    (replicated f32 tensors per param + scalar counters)."""
+    kern = opt.fused_kernel
+    if kern is None:
+        raise ValueError(
+            f"optimizer kind={opt.kind!r} exposes no fused kernel "
+            "(Optimizer.fused_kernel is None)"
+        )
+    state = {
+        name: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        for name in FUSED_STATE_TENSORS[kern]
+    }
+    for name in FUSED_STATE_SCALARS[kern]:
+        state[name] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def fused_step_scalars(opt: Optimizer, opt_state, eta):
+    """One step of the kernel's shared scalar tail (everything after the
+    per-leaf [inv_nalpha, clip] header) plus the advanced scalar state.
+
+    Returns ``(tail, new_scalars)`` where ``tail`` is a tuple of f32 scalars
+    in ``FUSED_SCALAR_TAIL[kernel]`` order and ``new_scalars`` maps the
+    ``FUSED_STATE_SCALARS`` entries to their post-step values."""
+    kern = opt.fused_kernel
+    h = opt.hyper or {}
+    if kern == "sgd":
+        return (eta, jnp.float32(h["momentum"]),
+                jnp.float32(h["weight_decay"])), {}
+    if kern == "adamw":
+        b1, b2 = float(h["b1"]), float(h["b2"])
+        count = opt_state["count"] + 1
+        t = count.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        return (
+            eta, jnp.float32(b1), jnp.float32(1.0 - b1), jnp.float32(b2),
+            jnp.float32(1.0 - b2), jnp.float32(h["eps"]),
+            jnp.float32(h["weight_decay"]), bc1, bc2,
+        ), {"count": count}
+    raise ValueError(f"unknown fused kernel {kern!r}")
+
+
+def fused_reference_update(opt: Optimizer, ghat, params, opt_state, eta):
+    """Unfused reference of the fused kernels' arithmetic, on full trees.
+
+    Used by the exact (step-0) path of the fused route — which has a decoded
+    float aggregate and no integer payload — and by the kernel property
+    tests. Bit-compatible with the kernels up to FMA reassociation."""
+    kern = opt.fused_kernel
+    tail, new_scalars = fused_step_scalars(opt, opt_state, eta)
+    if kern == "sgd":
+        lr, mu, wd = tail
+
+        def leaf(p, m, g):
+            p32 = p.astype(jnp.float32)
+            g32 = g.astype(jnp.float32) + wd * p32
+            m32 = mu * m.astype(jnp.float32) + g32
+            return (p32 - lr * m32).astype(p.dtype), m32
+
+        outs = jax.tree.map(leaf, params, opt_state["mom"], ghat)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=is_pair)
+        new_mom = jax.tree.map(lambda o: o[1], outs, is_leaf=is_pair)
+        return new_params, {"mom": new_mom}
+    if kern == "adamw":
+        lr, b1, omb1, b2, omb2, eps, wd, bc1, bc2 = tail
+
+        def leaf(p, m, v, g):
+            p32 = p.astype(jnp.float32)
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + omb1 * g32
+            v32 = b2 * v.astype(jnp.float32) + omb2 * jnp.square(g32)
+            step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            return (p32 - lr * (step + wd * p32)).astype(p.dtype), m32, v32
+
+        outs = jax.tree.map(
+            leaf, params, opt_state["mu"], opt_state["nu"], ghat
+        )
+        is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+        new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=is_triple)
+        new_mu = jax.tree.map(lambda o: o[1], outs, is_leaf=is_triple)
+        new_nu = jax.tree.map(lambda o: o[2], outs, is_leaf=is_triple)
+        return new_params, dict(mu=new_mu, nu=new_nu, **new_scalars)
+    raise ValueError(f"unknown fused kernel {kern!r}")

@@ -40,4 +40,7 @@ def sgd(momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False
         dx_scale=1.0 - momentum,
         kind="sgd",
         hyper=dict(momentum=momentum, weight_decay=weight_decay, nesterov=nesterov),
+        # the Pallas decode+momentum-SGD kernel implements the heavy-ball
+        # form only; nesterov has no fused route
+        fused_kernel=None if nesterov else "sgd",
     )

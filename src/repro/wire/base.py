@@ -27,7 +27,7 @@ extend :mod:`repro.wire`, not the call sites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, Tuple
+from typing import ClassVar, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -136,15 +136,25 @@ class WireFormat:
         self,
         words: jax.Array,
         param: jax.Array,
-        mom: jax.Array,
-        inv_nalpha: Any,
-        lr: Any,
-        mu: Any,
-        wd: Any,
+        opt: Tuple[jax.Array, ...],
+        scalars: jax.Array,
         *,
+        kernel: str,
         n_summed: int,
+        shift: jax.Array | None = None,
     ):
-        """Fused decode + momentum-SGD straight off the transport words (the
-        Pallas route): returns (new_param, new_mom) without materializing the
-        unpacked integer image in HBM."""
+        """Fused decode + optimizer step straight off the transport words
+        (the Pallas route) — the codec half of the capability-dispatch
+        contract. ``kernel`` names the optimizer arithmetic
+        (``Optimizer.fused_kernel``: "sgd" | "adamw"), ``opt`` carries that
+        kernel's per-leaf f32 state tensors in
+        ``optim.base.FUSED_STATE_TENSORS`` order, and ``scalars`` the
+        canonical f32 vector documented in :mod:`repro.kernels.fused_update`
+        (``[inv_nalpha, clip, *FUSED_SCALAR_TAIL[kernel]]``). ``shift`` is
+        the optional replicated global shift h (IntDIANA): the kernel
+        decodes g = h + Σints·inv_nalpha and emits the new shift (= g)
+        alongside.
+
+        Returns ``(new_param, new_opt, new_shift | None)`` without
+        materializing the unpacked integer image in HBM."""
         raise NotImplementedError

@@ -41,8 +41,10 @@ class DenseInt(WireFormat):
     def wire_bytes(self, size: int) -> int:
         return int(size) * jnp.dtype(self.lane_dtype).itemsize
 
-    def fused_update(self, words, param, mom, inv_nalpha, lr, mu, wd, *,
-                     n_summed: int):
+    def fused_update(self, words, param, opt, scalars, *, kernel: str,
+                     n_summed: int, shift=None):
         from repro.kernels import ops as kops
 
-        return kops.fused_update(words, param, mom, inv_nalpha, lr, mu, wd)
+        return kops.fused_apply(
+            words, param, tuple(opt), scalars, shift, kernel=kernel
+        )

@@ -70,8 +70,9 @@ class Logged:
     def wire_bytes(self, size: int) -> int:
         return self.inner.wire_bytes(size)
 
-    def fused_update(self, words, param, mom, inv_nalpha, lr, mu, wd, *,
-                     n_summed: int):
+    def fused_update(self, words, param, opt, scalars, *, kernel: str,
+                     n_summed: int, shift=None):
         return self.inner.fused_update(
-            words, param, mom, inv_nalpha, lr, mu, wd, n_summed=n_summed
+            words, param, opt, scalars,
+            kernel=kernel, n_summed=n_summed, shift=shift,
         )

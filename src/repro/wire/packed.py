@@ -96,11 +96,11 @@ class PackedInt(WireFormat):
     def wire_bytes(self, size: int) -> int:
         return 4 * self.words_len(size)
 
-    def fused_update(self, words, param, mom, inv_nalpha, lr, mu, wd, *,
-                     n_summed: int):
+    def fused_update(self, words, param, opt, scalars, *, kernel: str,
+                     n_summed: int, shift=None):
         from repro.kernels import ops as kops
 
-        return kops.fused_unpack_update(
-            words, param, mom, inv_nalpha, lr, mu, wd,
-            bits=self.bits, n_summed=n_summed,
+        return kops.fused_unpack_apply(
+            words, param, tuple(opt), scalars, shift,
+            kernel=kernel, bits=self.bits, n_summed=n_summed,
         )

@@ -168,6 +168,149 @@ def test_intdiana_shift_tracking():
     assert not np.allclose(h[0], h[1])
 
 
+def test_adamw_alpha_pinned():
+    """§4.1 EMA correction for AdamW, regression-pinned by hand (mirrors
+    tests/test_scaling.py::test_momentum_alpha_pinned, the PR 1 heavy-ball
+    version): Adam's first moment m = b1·m + (1-b1)·g amplifies injected
+    quantization noise by 1/(1-b1) at steady state, so the α rule must see
+    the applied update rescaled by dx_scale = 1-b1 — NOT the raw
+    lr-scaled, preconditioned Δx. For b1=0.9, β=0.9, one observed update
+    with ||Δx||²=2, d=100, n=4, η=0.5:
+
+        s  = (1-0.9)² · 2     = 0.02
+        r  = 0.9·0 + 0.1·s    = 0.002
+        α  = √100 / √(2·4·0.002/0.25 + (1e-8)²) = 10/√0.064 = 39.528471
+
+    Without the fix (dx_scale left at 1.0) the same trajectory gives
+    r = 0.2 and α = 3.9528471 — a 10× under-scaling of the wire."""
+    from repro.core.scaling import AlphaMovingAvg
+    from repro.core.stats import local_dx_stats, scale_dx_stats
+    from repro.optim import adamw
+
+    opt = adamw()  # b1=0.9
+    assert abs(opt.dx_scale - 0.1) < 1e-12
+    assert abs(adamw(b1=0.8).dx_scale - 0.2) < 1e-12
+    rule = AlphaMovingAvg()  # β=0.9, ε=1e-8 (paper defaults)
+    dx = {"x": jnp.sqrt(jnp.full((1,), 2.0))}
+    stats = scale_dx_stats(local_dx_stats(dx), opt.dx_scale)
+    assert abs(float(stats.sq) - 0.02) < 1e-8
+    state = rule.update(rule.init(dx), stats)
+    alpha = float(rule.alpha(state, jnp.float32(0.5), 4, 100))
+    np.testing.assert_allclose(alpha, 39.528471, rtol=1e-5)
+    # the buggy (uncorrected) trajectory lands 10× lower — pin the distance
+    bad = rule.update(rule.init(dx), local_dx_stats(dx))
+    alpha_bad = float(rule.alpha(bad, jnp.float32(0.5), 4, 100))
+    np.testing.assert_allclose(alpha_bad, 3.9528471, rtol=1e-4)
+
+
+def test_intdiana_aggregate_wire_matches_aggregate():
+    """The wire-level split (aggregate_wire + decode/shift-advance, the
+    fused-route entry) must reproduce aggregate() exactly: same ĝ, same
+    h_local, and ĝ == the advanced h_global."""
+    comp = make_compressor("intdiana")
+    grads = _grads(jax.random.PRNGKey(6), (16,))
+    state = comp.init({"w": grads["w"][0]})
+    state = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + jnp.shape(x)), state)
+    state["alpha"] = jax.tree.map(
+        lambda x: jnp.ones_like(x) if x.dtype != jnp.int32 else x, state["alpha"]
+    )
+    key, eta = jax.random.PRNGKey(0), jnp.float32(0.1)
+
+    def ref(s, g):
+        return comp.aggregate(s, g, key=key, eta=eta, ctx=CTX)
+
+    def wirelevel(s, g):
+        wa, alphas, s2, m = comp.aggregate_wire(s, g, key=key, eta=eta, ctx=CTX)
+        wf = comp.wire_format
+        mean_q = jax.tree.map(
+            lambda si, a: wf.decode(si, a, n_workers=N), wa.ints, alphas
+        )
+        h_global = jax.tree.map(jnp.add, s2["h_global"], mean_q)
+        return h_global, comp.fused_store_shift(s2, h_global)
+
+    g_ref, s_ref, _ = jax.vmap(ref, in_axes=(0, 0), axis_name=AXIS)(state, grads)
+    g_wire, s_wire = jax.vmap(wirelevel, in_axes=(0, 0), axis_name=AXIS)(
+        state, grads
+    )
+    np.testing.assert_array_equal(np.asarray(g_ref["w"]), np.asarray(g_wire["w"]))
+    for k in ("h_local", "h_global"):
+        np.testing.assert_array_equal(
+            np.asarray(s_ref[k]["w"]), np.asarray(s_wire[k]["w"])
+        )
+    np.testing.assert_array_equal(
+        np.asarray(g_ref["w"]), np.asarray(s_ref["h_global"]["w"])
+    )
+
+
+def test_intdiana_pipelined_estimator_unbiased():
+    """The microbatch-pipelined IntDIANA round (encode_ints(n_accum=M) ×M,
+    accumulate, finish_pipelined) must recover the true gradient mean to
+    quantization precision. Regression: every image must carry the FULL
+    local shift — a per-image h_i/M dilution decodes to
+    ḡ + h̄·(1-1/M) (shift subtracted twice-diluted) and drifts h_local
+    toward M·ḡ, i.e. the applied update compounds to ~M× the gradient."""
+    from repro.core.scaling import AlphaState
+
+    n_micro, d = 2, 64
+    comp = make_compressor("intdiana", stochastic=False)
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (N, n_micro, d))
+    h0 = jax.random.normal(jax.random.fold_in(key, 1), (N, d))
+    state = comp.init({"w": g[0, 0]})
+    state = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + jnp.shape(x)), state)
+    state = dict(state, h_local={"w": h0},
+                 h_global={"w": jnp.broadcast_to(h0.mean(0), (N, d))})
+    # α = η√d/(√n·√r) = 1e6: rounding error ~5e-7, far below the h̄-scale
+    # bias the dilution bug would produce, and far inside the int32 clip
+    state["alpha"] = AlphaState(
+        r=jnp.full((N,), 1.6e-11), step=jnp.ones((N,), jnp.int32)
+    )
+
+    def worker(s, gw):
+        int_acc = local_acc = alphas = None
+        for m in range(n_micro):
+            ints, alphas = comp.encode_ints(
+                s, {"w": gw[m]}, key=jax.random.PRNGKey(m),
+                eta=jnp.float32(1.0), ctx=CTX, n_accum=n_micro,
+            )
+            local_acc = (ints if local_acc is None
+                         else jax.tree.map(jnp.add, local_acc, ints))
+            _, int_sum = CTX.psum_wire(ints, comp.wire_format)
+            int_acc = (int_sum if int_acc is None
+                       else jax.tree.map(jnp.add, int_acc, int_sum))
+        return comp.finish_pipelined(
+            s, int_acc, local_acc, alphas, ctx=CTX, n_accum=n_micro
+        )
+
+    ghat, s2 = jax.vmap(worker, in_axes=(0, 0), axis_name=AXIS)(state, g)
+    true_mean = np.asarray(g.mean(axis=(0, 1)))
+    np.testing.assert_allclose(
+        np.asarray(ghat["w"][0]), true_mean, atol=1e-4
+    )
+    # DIANA shift recursion: h_i' = h_i + mean_m Q(g_i^m - h_i) -> mean g_i^m
+    np.testing.assert_allclose(
+        np.asarray(s2["h_local"]["w"]), np.asarray(g.mean(axis=1)), atol=1e-4
+    )
+    # global shift advanced to ĝ, identically on every worker
+    np.testing.assert_allclose(
+        np.asarray(s2["h_global"]["w"][0]), np.asarray(ghat["w"][0]), atol=1e-6
+    )
+
+
+def test_fused_capability_flags():
+    """The capability matrix the fused route dispatches on: wire-level
+    compressors advertise it, gather-style baselines do not."""
+    from repro.core import (
+        HeuristicIntSGD, IntDIANA, IntSGD, NatSGD, PowerSGD, QSGD, SignSGD,
+        TopK,
+    )
+
+    assert IntSGD.fused_capable and IntDIANA.fused_capable
+    assert IntDIANA.fused_local_state and not IntSGD.fused_local_state
+    for c in (QSGD, NatSGD, PowerSGD, SignSGD, TopK, HeuristicIntSGD):
+        assert not c.fused_capable, c
+
+
 def test_allreduce_vs_allgather_flag():
     from repro.core import QSGD, IntSGD, NatSGD, PowerSGD, TopK
 

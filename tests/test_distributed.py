@@ -152,6 +152,99 @@ print("SP_OK")
     assert "SP_OK" in out
 
 
+_FUSED_FAMILY_SCRIPT = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch, smoke_config, ShapeConfig
+from repro.core import make_compressor
+from repro.launch.step import build_train_step, build_init_state
+from repro.launch.inputs import materialize_batch
+from repro.models.transformer import init_lm_params
+from repro.optim import adamw, sgd
+from repro.optim.schedules import constant
+
+N_DP = 4
+mesh = jax.make_mesh((4, 1), ("data", "model"))
+tr = ShapeConfig("t", 32, 4, "train")
+cfg = smoke_config(get_arch("xlstm-125m"))
+key = jax.random.PRNGKey(0)
+
+def run(wire, fused, overlap):
+    comp = make_compressor(%(comp)s)
+    opt = adamw()
+    art = build_train_step(cfg, mesh, tr, compressor=comp, base_opt=opt,
+                           lr_schedule=constant(0.01), param_dtype=jnp.float32,
+                           fused=fused, donate=False, wire=wire,
+                           overlap=overlap, bucket_words=2048)
+    params = init_lm_params(key, cfg, tp=1, n_shards=1, dtype=jnp.float32)
+    params = jax.device_put(params, art.in_shardings[0])
+    init = build_init_state(cfg, mesh, compressor=comp, base_opt=opt,
+                            fused=fused)
+    opt_state, comp_state = init(params)
+    batch = materialize_batch(cfg, tr, key)
+    losses = []
+    for i in range(5):
+        fn = art.jitted["exact"] if i == 0 else art.jitted["compressed"]
+        params, opt_state, comp_state, loss, _ = fn(
+            params, opt_state, comp_state, jnp.int32(i),
+            jax.random.fold_in(key, i), batch)
+        losses.append(float(loss))
+    return params, opt_state, comp_state, losses
+
+def pad_rows(x, n):
+    flat = np.asarray(x, np.float32).reshape(-1)
+    per = (flat.size + n - 1) // n * n
+    return np.pad(flat, (0, per - flat.size)).reshape(n, per // n)
+
+def moment_rows(opt_state, fused, name):
+    # both routes as (n_dp, k/n_dp) f32 rows: the fused route's replicated
+    # tensor resharded like the ZeRO-1 master layout
+    if fused:
+        return [pad_rows(l, N_DP) for l in jax.tree.leaves(opt_state[name])]
+    return [np.asarray(l, np.float32)
+            for l in jax.tree.leaves(opt_state["base"][name])]
+
+allclose = lambda a, b: np.testing.assert_allclose(
+    np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6)
+
+for wire in ("dense8", "packed8"):
+    for overlap in ("off", "ring"):
+        p_u, o_u, c_u, l_u = run(wire, False, overlap)
+        p_f, o_f, c_f, l_f = run(wire, True, overlap)
+        np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_u),
+                                   rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(p_u), jax.tree.leaves(p_f)):
+            allclose(a, b)
+        # moment state parity: fused in-register EMAs == ZeRO-1 sharded EMAs
+        for nm in ("mu", "nu"):
+            for a, b in zip(moment_rows(o_u, False, nm),
+                            moment_rows(o_f, True, nm)):
+                allclose(a, b)
+        assert int(o_u["base"]["count"]) == int(o_f["count"]) == 5
+        # compressor state parity (IntDIANA shifts ride the fused kernel)
+        for a, b in zip(jax.tree.leaves(c_u), jax.tree.leaves(c_f)):
+            allclose(a, b)
+        print("PARITY", wire, overlap)
+print("FUSED_FAMILY_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "comp",
+    ['"intsgd8"', '"intdiana", bits=8'],
+    ids=["adamw_intsgd8", "adamw_intdiana"],
+)
+def test_fused_family_parity_on_mesh(comp):
+    """ULP parity for the new fused routes on the REAL 4-device mesh:
+    {AdamW}×{IntSGD, IntDIANA}×{dense8, packed8}×{overlap off, ring}, 5
+    steps, fused (Pallas decode+AdamW, moments in-register, IntDIANA shift
+    advanced inside the kernel) vs unfused (decode + ZeRO-1 AdamW) — losses,
+    params, BOTH Adam moments, the step count and the DIANA shift state all
+    compared."""
+    out = _run(_FUSED_FAMILY_SCRIPT % {"comp": comp}, timeout=1200)
+    assert "FUSED_FAMILY_OK" in out
+
+
 @pytest.mark.slow
 def test_packed_wire_parity_on_mesh():
     """ULP parity on the REAL 4-device mesh: build_train_step over the

@@ -126,6 +126,109 @@ def test_fused_update_matches_oracle(shape):
     np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
 
 
+def _adamw_scalars(*, inv_nalpha, clip, lr, b1, b2, eps, wd, t):
+    """Canonical adamw scalar vector (kernels/fused_update.py layout)."""
+    return jnp.stack([
+        jnp.float32(inv_nalpha), jnp.float32(clip), jnp.float32(lr),
+        jnp.float32(b1), jnp.float32(1.0 - b1), jnp.float32(b2),
+        jnp.float32(1.0 - b2), jnp.float32(eps), jnp.float32(wd),
+        jnp.float32(1.0 - b1**t), jnp.float32(1.0 - b2**t),
+    ])
+
+
+@pytest.mark.parametrize("shape", [(64,), (513, 300)])
+@pytest.mark.parametrize("with_shift", [False, True])
+def test_fused_unpack_adamw_matches_oracle(shape, with_shift):
+    """fused_unpack_adamw_2d == unpack + bias-corrected AdamW composition,
+    with and without the IntDIANA global shift (whose new value must be the
+    UNCLIPPED decoded aggregate)."""
+    n, bits, t = 4, 8, 3
+    key = jax.random.PRNGKey(13)
+    lim = ref._INT_LIM[bits] // n
+    size = int(np.prod(shape))
+    ints = jax.random.randint(key, (n, size), -lim, lim + 1)
+    wsum = sum(
+        ops.pack_words(ints[i].reshape(shape), bits=bits, n_workers=n)
+        for i in range(n)
+    )
+    p = jax.random.normal(key, shape)
+    mu = jax.random.normal(jax.random.fold_in(key, 1), shape) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), shape)) * 0.01
+    h = (jax.random.normal(jax.random.fold_in(key, 3), shape) * 0.3
+         if with_shift else None)
+    kw = dict(inv_nalpha=1e-3, lr=0.05, b1=0.9, b2=0.95, eps=1e-8, wd=0.1)
+    sc = _adamw_scalars(clip=0.7, t=t, **kw)
+    got_p, (got_m, got_v), got_h = ops.fused_unpack_apply(
+        wsum, p, (mu, nu), sc, h, kernel="adamw", bits=bits, n_summed=n
+    )
+    want_p, want_m, want_v, want_h = ref.fused_unpack_adamw_ref(
+        wsum, p, mu, nu, bits=bits, n_summed=n,
+        clip=jnp.float32(0.7), shift=h,
+        bc1=jnp.float32(1.0 - 0.9**t), bc2=jnp.float32(1.0 - 0.95**t),
+        **{k: jnp.float32(v) for k, v in kw.items()},
+    )
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-7)
+    if with_shift:
+        np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-6)
+    else:
+        assert got_h is None
+
+
+@given(st.integers(1, 3000), st.integers(1, 60), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fused_adamw_kernel_matches_optimizer_update(size, t, seed):
+    """Property: the fused AdamW kernel reproduces the REFERENCE optimizer
+    (optim/adamw.py::update — the exact arithmetic the unfused ZeRO-1 route
+    runs) on random integer images, for any size and step count."""
+    from repro.optim import adamw
+
+    key = jax.random.PRNGKey(seed)
+    ints = jax.random.randint(key, (size,), -4 * 127, 4 * 127 + 1)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (size,))
+    mu = jax.random.normal(jax.random.fold_in(key, 2), (size,)) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (size,))) * 0.01
+    inv_nalpha, lr = 2.5e-3, 0.07
+    opt = adamw()  # b1=0.9, b2=0.95, eps=1e-8, wd=0.1
+    h = opt.hyper
+    state = {"mu": {"w": mu}, "nu": {"w": nu},
+             "count": jnp.asarray(t - 1, jnp.int32)}
+    g = {"w": ints.astype(jnp.float32) * inv_nalpha}
+    upd, st2 = opt.update(g, state, {"w": p}, jnp.float32(lr))
+    want_p = p + upd["w"]
+    sc = _adamw_scalars(
+        inv_nalpha=inv_nalpha, clip=1.0, lr=lr, b1=h["b1"], b2=h["b2"],
+        eps=h["eps"], wd=h["weight_decay"], t=t,
+    )
+    got_p, (got_m, got_v), _ = ops.fused_apply(
+        ints, p, (mu, nu), sc, kernel="adamw"
+    )
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, st2["mu"]["w"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, st2["nu"]["w"], rtol=1e-5, atol=1e-7)
+
+
+def test_fused_sgd_shift_emits_decoded_aggregate():
+    """SGD kernel with the IntDIANA shift: new shift == h + Σints·inv_nα
+    (unclipped), while the update consumes clip·(h + Σints·inv_nα)."""
+    key = jax.random.PRNGKey(5)
+    ints = jax.random.randint(key, (1000,), -500, 500)
+    p = jax.random.normal(key, (1000,))
+    m = jax.random.normal(jax.random.fold_in(key, 1), (1000,))
+    h = jax.random.normal(jax.random.fold_in(key, 2), (1000,)) * 0.2
+    inv_nalpha, clip, lr, mu, wd = 2e-3, 0.6, 0.05, 0.9, 1e-4
+    sc = jnp.stack([jnp.float32(x) for x in (inv_nalpha, clip, lr, mu, wd)])
+    got_p, (got_m,), got_h = ops.fused_apply(
+        ints, p, (m,), sc, h, kernel="sgd"
+    )
+    g_agg = ints * inv_nalpha + h
+    m2 = mu * m + (clip * g_agg + wd * p)
+    np.testing.assert_allclose(got_h, g_agg, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, m2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_p, p - lr * m2, rtol=1e-5, atol=1e-6)
+
+
 def test_fused_update_equals_sgd_semantics():
     """Fused kernel == decode + torch-SGD reference sequence."""
     key = jax.random.PRNGKey(2)

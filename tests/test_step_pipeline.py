@@ -20,12 +20,12 @@ def mesh():
 
 
 def _run_steps(cfg, mesh, shape, *, fused, steps=4, compressor="intsgd",
-               wire=None):
+               wire=None, opt=None, lr=0.2):
     comp = make_compressor(compressor)
-    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    opt = opt if opt is not None else sgd(momentum=0.9, weight_decay=1e-4)
     art = build_train_step(
         cfg, mesh, shape, compressor=comp, base_opt=opt,
-        lr_schedule=constant(0.2), param_dtype=jnp.float32,
+        lr_schedule=constant(lr), param_dtype=jnp.float32,
         fused=fused, donate=False, wire=wire,
     )
     key = jax.random.PRNGKey(0)
@@ -88,6 +88,32 @@ def test_packed_wire_matches_dense_route(mesh, fused):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("compressor,wire", [("intsgd8", "packed8"),
+                                             ("intdiana", None)])
+def test_fused_adamw_matches_unfused(mesh, compressor, wire):
+    """The fused decode+AdamW kernel route (bias-corrected moments updated
+    in-register) must match the unfused decode + ZeRO-1 AdamW update to
+    ULP-scale tolerance, for plain IntSGD and for the IntDIANA shifted
+    decode. The 4-device-mesh matrix lives in
+    test_distributed.py::test_fused_family_parity_on_mesh."""
+    cfg = smoke_config(get_arch("xlstm-125m"))
+    shape = ShapeConfig("t", 32, 4, "train")
+    p_ref, l_ref = _run_steps(
+        cfg, mesh, shape, fused=False, compressor=compressor, wire=wire,
+        opt=adamw(), lr=0.01,
+    )
+    p_fus, l_fus = _run_steps(
+        cfg, mesh, shape, fused=True, compressor=compressor, wire=wire,
+        opt=adamw(), lr=0.01,
+    )
+    np.testing.assert_allclose(np.asarray(l_fus), np.asarray(l_ref), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_fus)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6
+        )
+
+
+@pytest.mark.slow
 def test_eval_step_matches_train_loss(mesh):
     """build_eval_step is the train body's forward stage: on identical
     (params, batch) it must report the train step's pre-update loss."""
@@ -117,16 +143,42 @@ def test_eval_step_matches_train_loss(mesh):
     )
 
 
-def test_fused_route_validates_optimizer(mesh):
+def test_fused_route_capability_errors(mesh):
+    """Pairs outside the fused capability matrix must fail at build time
+    naming the MISSING CAPABILITY (Compressor.fused_capable /
+    Optimizer.fused_kernel), not a concrete type — the routing contract is
+    capability dispatch, so the error has to teach the capability."""
     cfg = smoke_config(get_arch("xlstm-125m"))
     shape = ShapeConfig("t", 32, 4, "train")
-    with pytest.raises(ValueError, match="optim.sgd"):
-        build_train_step(
-            cfg, mesh, shape, compressor=make_compressor("intsgd"),
-            base_opt=adamw(), lr_schedule=constant(0.1), fused=True,
-        )
-    with pytest.raises(ValueError, match="IntSGD"):
+    # compressor without wire-level aggregation: names fused_capable and the
+    # compressor, not "isinstance of IntSGD"
+    with pytest.raises(ValueError, match="fused_capable") as ei:
         build_train_step(
             cfg, mesh, shape, compressor=make_compressor("qsgd"),
             base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1), fused=True,
         )
+    assert "qsgd" in str(ei.value)
+    assert "IntSGD" not in str(ei.value)
+    # optimizer without a fused kernel form (nesterov): names fused_kernel
+    with pytest.raises(ValueError, match="fused_kernel"):
+        build_train_step(
+            cfg, mesh, shape, compressor=make_compressor("intsgd"),
+            base_opt=sgd(momentum=0.9, nesterov=True),
+            lr_schedule=constant(0.1), fused=True,
+        )
+    # the capability survives neither opaque wrapping...
+    from repro.optim.base import chain_clip_by_global_norm
+
+    with pytest.raises(ValueError, match="fused_kernel"):
+        build_train_step(
+            cfg, mesh, shape, compressor=make_compressor("intsgd"),
+            base_opt=chain_clip_by_global_norm(sgd(momentum=0.9), 1.0),
+            lr_schedule=constant(0.1), fused=True,
+        )
+    # ...while every capable pair builds: {sgd, adamw} × {intsgd, intdiana}
+    for opt in (sgd(momentum=0.9), adamw()):
+        for comp in ("intsgd", "intdiana"):
+            build_train_step(
+                cfg, mesh, shape, compressor=make_compressor(comp),
+                base_opt=opt, lr_schedule=constant(0.1), fused=True,
+            )
