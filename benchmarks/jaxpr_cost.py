@@ -16,6 +16,12 @@ FLOP conventions: dot_general = 2·M·N·K·batch; elementwise = 1/output elem;
 reductions = input size. Bytes = operands+outputs per eqn (unfused upper
 bound; fusion on TPU lowers the true HBM traffic — the roofline memory term
 is therefore conservative, consistently across §Perf iterations).
+
+The generic jaxpr iteration layer lives in
+:mod:`repro.analysis.jaxpr_walk` (promoted there in PR 8 so the wire
+auditor shares it); this module re-exports ``iter_eqns``/``_axes_of``/
+``_COLLECTIVES`` for the benchmarks that import them from here and keeps
+only the COST semantics.
 """
 from __future__ import annotations
 
@@ -23,54 +29,15 @@ import math
 from collections import defaultdict
 
 import jax
-import numpy as np
 
-_COLLECTIVES = {
-    "psum": "all-reduce",
-    "all_gather": "all-gather",
-    "reduce_scatter": "reduce-scatter",
-    "psum_scatter": "reduce-scatter",
-    "all_to_all": "all-to-all",
-    "ppermute": "collective-permute",
-    "pmax": "all-reduce",
-    "pmin": "all-reduce",
-}
-
-_CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
-               "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "remat2",
-               "checkpoint", "custom_lin")
-
-
-def iter_eqns(jaxpr):
-    """Yield every eqn in `jaxpr` and all sub-jaxprs, each ONCE — cond
-    branches and while cond/body included, scan bodies NOT multiplied by
-    trip count. The structural-counting walk (collective counts, primitive
-    presence) builds on this; :func:`jaxpr_cost` keeps its own recursion
-    because byte/FLOP accounting needs scan-length scaling and
-    worst-cond-branch semantics that a flat iteration cannot express."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        if eqn.primitive.name == "cond":
-            for b in eqn.params["branches"]:
-                yield from iter_eqns(b.jaxpr)
-            continue
-        for k, v in eqn.params.items():
-            if k.endswith("jaxpr") and (hasattr(v, "eqns") or hasattr(v, "jaxpr")):
-                yield from iter_eqns(v.jaxpr if hasattr(v, "jaxpr") else v)
-
-
-def _size_bytes(aval) -> int:
-    try:
-        return int(np.prod(aval.shape)) * aval.dtype.itemsize
-    except Exception:
-        return 0
-
-
-def _nelem(aval) -> int:
-    try:
-        return int(np.prod(aval.shape))
-    except Exception:
-        return 0
+from repro.analysis.jaxpr_walk import (
+    CALL_PRIMS as _CALL_PRIMS,  # noqa: F401  (bench imports)
+    COLLECTIVES as _COLLECTIVES,
+    aval_nelem as _nelem,
+    aval_size_bytes as _size_bytes,
+    eqn_axes as _axes_of,
+    iter_eqns,
+)
 
 
 class Cost:
@@ -112,17 +79,6 @@ def _dot_flops(eqn) -> float:
         s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb)
     )
     return 2.0 * batch * m * n * contract
-
-
-def _axes_of(eqn):
-    p = eqn.params
-    for k in ("axes", "axis_name", "axis_names"):
-        if k in p:
-            a = p[k]
-            if isinstance(a, (tuple, list, frozenset, set)):
-                return tuple(sorted(str(x) for x in a))
-            return (str(a),)
-    return ("?",)
 
 
 def jaxpr_cost(jaxpr) -> Cost:

@@ -1,0 +1,50 @@
+"""repro.analysis — static verification of the repo's contracts (PR 8).
+
+Two layers:
+
+  * the floatless-wire AUDITOR (``jaxpr_walk`` + ``intervals`` +
+    ``wire_audit``): jaxpr-level proof that a built train step puts no
+    float on the dp wire and that the §5.1 guard-bit/overflow invariants
+    hold for the declared (codec, n_workers, microbatches);
+  * the AST contract LINTER (``lint``): C-rules over the source tree, no
+    jax import anywhere on its path.
+
+This ``__init__`` stays import-light on purpose: ``python -m
+repro.analysis.lint src/`` must be able to run (and fail a CI job) before
+anything imports jax. The audit API is re-exported lazily.
+
+CLI: ``python -m repro.analysis --matrix [--check]`` sweeps the supported
+(config × codec × overlap × microbatch) grid and writes
+``ANALYSIS_report.json``.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "audit_jaxpr": "repro.analysis.wire_audit",
+    "audit_step": "repro.analysis.wire_audit",
+    "spec_for_step": "repro.analysis.wire_audit",
+    "WireSpec": "repro.analysis.wire_audit",
+    "Violation": "repro.analysis.wire_audit",
+    "AuditReport": "repro.analysis.wire_audit",
+    "WireAuditError": "repro.analysis.wire_audit",
+    "RULES": "repro.analysis.wire_audit",
+    "Interval": "repro.analysis.intervals",
+    "wire_chain_proof": "repro.analysis.intervals",
+    "eval_jaxpr_intervals": "repro.analysis.intervals",
+    "iter_eqns": "repro.analysis.jaxpr_walk",
+    "COLLECTIVES": "repro.analysis.jaxpr_walk",
+    "lint_paths": "repro.analysis.lint",
+    "lint_source": "repro.analysis.lint",
+    "LINT_RULES": "repro.analysis.lint",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,182 @@
+"""``python -m repro.analysis --matrix`` — sweep the floatless-wire audit
+over the supported (config × codec × overlap × microbatch) grid, run the
+contract linter, and write ``ANALYSIS_report.json``.
+
+Every point builds the real train step (``build_train_step``) on a forced
+4-host-device mesh, traces it, and runs :func:`repro.analysis.wire_audit
+.audit_jaxpr` — trace only, nothing is compiled or executed. A few fused
+points ride along for W003 coverage. ``--check`` exits non-zero on any
+violation (the CI tier-1 wiring).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+DEFAULT_CODECS = ("dense8", "packed8")
+DEFAULT_OVERLAPS = ("off", "ring")
+DEFAULT_MICROBATCHES = (1, 4)
+
+
+def _parse_args(argv):
+    p = argparse.ArgumentParser(prog="python -m repro.analysis")
+    p.add_argument("--matrix", action="store_true",
+                   help="sweep the audit over the supported grid")
+    p.add_argument("--check", action="store_true",
+                   help="exit non-zero on any lint/audit violation")
+    p.add_argument("--configs", default=None,
+                   help="comma-separated arch subset (default: all shipped)")
+    p.add_argument("--codecs", default=",".join(DEFAULT_CODECS))
+    p.add_argument("--overlaps", default=",".join(DEFAULT_OVERLAPS))
+    p.add_argument("--microbatches", default=",".join(map(str, DEFAULT_MICROBATCHES)))
+    p.add_argument("--no-fused-points", action="store_true",
+                   help="skip the extra fused-route (W003) coverage points")
+    p.add_argument("--report", default="ANALYSIS_report.json")
+    p.add_argument("--devices", type=int, default=4)
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(sys.argv[1:] if argv is None else argv)
+    if not args.matrix:
+        print("nothing to do: pass --matrix (or use `python -m "
+              "repro.analysis.lint <paths>` for the linter alone)")
+        return 2
+
+    # the forced-device env must be set before jax is first imported
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}",
+    )
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import jax
+
+    from repro.analysis import lint as lint_mod
+    from repro.analysis import wire_audit
+    from repro.configs import ARCHS, ShapeConfig, get_arch, smoke_config
+    from repro.configs.base import _load as _load_archs
+    from repro.core import make_compressor
+    from repro.launch.step import build_train_step
+    from repro.wire import make_wire_format
+    from repro.optim import sgd
+    from repro.optim.schedules import constant
+
+    src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    lint_violations = lint_mod.lint_paths([src_root])
+    for v in lint_violations:
+        print(f"LINT {v}")
+
+    _load_archs()
+    configs = (
+        [c.strip() for c in args.configs.split(",") if c.strip()]
+        if args.configs
+        else sorted(ARCHS)
+    )
+    codecs = [c.strip() for c in args.codecs.split(",") if c.strip()]
+    overlaps = [o.strip() for o in args.overlaps.split(",") if o.strip()]
+    micro = [int(m) for m in args.microbatches.split(",") if m.strip()]
+
+    mesh = jax.make_mesh((args.devices, 1), ("data", "model"))
+    # local batch must divide into every microbatch count
+    lcm = 1
+    for m in micro:
+        lcm = lcm * m // _gcd(lcm, m)
+    shape = ShapeConfig("analysis", 64, args.devices * lcm, "train")
+
+    points = [
+        (arch, codec, ov, m, False)
+        for arch in configs
+        for codec in codecs
+        for ov in overlaps
+        for m in micro
+    ]
+    if not args.no_fused_points and configs:
+        # fused route only supports M=1; packed point exercises W003,
+        # dense point pins the fused dense image as in-contract
+        points += [
+            (configs[0], "packed8", "off", 1, True),
+            (configs[0], "dense8", "off", 1, True),
+        ]
+
+    results = []
+    t_all = time.time()
+    for arch, codec, ov, m, fused in points:
+        label = f"{arch} × {codec} × overlap={ov} × M={m}" + (
+            " × fused" if fused else ""
+        )
+        t0 = time.time()
+        try:
+            art = build_train_step(
+                smoke_config(get_arch(arch)),
+                mesh,
+                shape,
+                compressor=make_compressor(
+                    "intsgd", bits=make_wire_format(codec).bits, wire=codec
+                ),
+                base_opt=sgd(momentum=0.9),
+                lr_schedule=constant(0.1),
+                tp_override=1,
+                fused=fused,
+                overlap=ov,
+                microbatches=m,
+            )
+            report = wire_audit.audit_step(art)
+            entry = {
+                "config": arch, "codec": codec, "overlap": ov,
+                "microbatches": m, "fused": fused,
+                **report.to_dict(),
+            }
+        except Exception as e:  # a build failure is a matrix failure
+            entry = {
+                "config": arch, "codec": codec, "overlap": ov,
+                "microbatches": m, "fused": fused,
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "violations": [],
+            }
+        entry["seconds"] = round(time.time() - t0, 2)
+        results.append(entry)
+        status = "OK" if entry["ok"] else "FAIL"
+        print(f"audit {label}: {status} ({entry['seconds']}s)")
+        if not entry["ok"]:
+            for v in entry.get("violations", []):
+                print(f"    [{v['rule']}] {v['where']}: {v['message']}")
+            if "error" in entry:
+                print(f"    build error: {entry['error']}")
+
+    ok = not lint_violations and all(r["ok"] for r in results)
+    artifact = {
+        "grid": {
+            "configs": configs, "codecs": codecs, "overlaps": overlaps,
+            "microbatches": micro,
+            "mesh": {"data": args.devices, "model": 1},
+        },
+        "lint": [v.to_dict() for v in lint_violations],
+        "points": results,
+        "ok": ok,
+        "seconds": round(time.time() - t_all, 2),
+    }
+    with open(args.report, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+    n_bad = sum(not r["ok"] for r in results)
+    print(
+        f"matrix: {len(results)} points, {n_bad} failing, "
+        f"{len(lint_violations)} lint violation(s) -> {args.report} "
+        f"({artifact['seconds']}s)"
+    )
+    if args.check and not ok:
+        return 1
+    return 0
+
+
+def _gcd(a, b):
+    while b:
+        a, b = b, a % b
+    return a
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

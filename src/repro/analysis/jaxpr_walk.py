@@ -1,0 +1,129 @@
+"""Generic jaxpr walking — THE shared iteration layer for every structural
+pass over a built step (cost model, overlap counters, the wire auditor).
+
+Promoted out of ``benchmarks/jaxpr_cost.py`` (PR 8) so src-side analyses
+don't import a benchmark module: the benchmarks now re-export from here.
+Everything in this module is structural only — no cost semantics, no rule
+semantics; those live in the consumers (:mod:`benchmarks.jaxpr_cost`,
+:mod:`repro.analysis.wire_audit`).
+
+Fixes folded in with the promotion (both were latent walker bugs):
+
+  * ``COLLECTIVES`` includes ``pmean`` — a backend/JAX version that emits a
+    first-class pmean primitive would previously count zero collective bytes
+    in the roofline table (current CPU JAX lowers ``lax.pmean`` to
+    psum+div, so the entry is future-proofing, not a behavior change here);
+  * ``iter_eqns`` scans the REMAINING params of a ``cond`` eqn after its
+    branches instead of ``continue``-ing — a cond carrying another sub-jaxpr
+    param would previously have that subtree silently skipped.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+__all__ = [
+    "COLLECTIVES",
+    "CALL_PRIMS",
+    "iter_eqns",
+    "eqn_subjaxprs",
+    "eqn_axes",
+    "collective_eqns",
+    "aval_size_bytes",
+    "aval_nelem",
+]
+
+# collective primitive name -> communication kind. The auditor and the cost
+# model both key off this table; a primitive missing here is invisible to
+# every structural pass, so additions belong HERE, not in the consumers.
+COLLECTIVES = {
+    "psum": "all-reduce",
+    "pmean": "all-reduce",  # only present on JAX builds with a pmean prim
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "psum_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+}
+
+# collectives whose payload is combined across devices (vs merely moved /
+# concatenated) — the surface the floatless-wire rule audits. A ppermute hop
+# is included: on the ring route it carries in-flight partial SUMS.
+REDUCING_COLLECTIVES = frozenset(
+    {"psum", "pmean", "pmax", "pmin", "reduce_scatter", "psum_scatter",
+     "ppermute"}
+)
+
+CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
+              "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "remat2",
+              "checkpoint", "custom_lin")
+
+
+def _as_jaxpr(v):
+    """ClosedJaxpr | Jaxpr -> Jaxpr."""
+    return v.jaxpr if hasattr(v, "jaxpr") else v
+
+
+def eqn_subjaxprs(eqn) -> Iterator:
+    """Every sub-jaxpr held by ``eqn.params``, each exactly once.
+
+    Scans ALL params: the ``branches`` tuple of a cond AND any ``*jaxpr``
+    param the same eqn carries (the old walker ``continue``-d after the
+    branches, skipping sibling sub-jaxpr params)."""
+    for k, v in eqn.params.items():
+        if k == "branches":
+            for b in v:
+                yield _as_jaxpr(b)
+        elif k.endswith("jaxpr") and (hasattr(v, "eqns") or hasattr(v, "jaxpr")):
+            yield _as_jaxpr(v)
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Yield every eqn in `jaxpr` and all sub-jaxprs, each ONCE — cond
+    branches and while cond/body included, scan bodies NOT multiplied by
+    trip count. Structural-counting walks (collective counts, primitive
+    presence, the wire audit) build on this; :func:`benchmarks.jaxpr_cost
+    .jaxpr_cost` keeps its own recursion because byte/FLOP accounting needs
+    scan-length scaling and worst-cond-branch semantics that a flat
+    iteration cannot express."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in eqn_subjaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def eqn_axes(eqn) -> Tuple[str, ...]:
+    """The mesh/vmap axis names a collective eqn communicates over."""
+    p = eqn.params
+    for k in ("axes", "axis_name", "axis_names"):
+        if k in p:
+            a = p[k]
+            if isinstance(a, (tuple, list, frozenset, set)):
+                return tuple(sorted(str(x) for x in a))
+            return (str(a),)
+    return ("?",)
+
+
+def collective_eqns(jaxpr) -> Iterator[tuple]:
+    """Yield ``(eqn, kind, axes)`` for every collective in the whole tree."""
+    for eqn in iter_eqns(jaxpr):
+        kind = COLLECTIVES.get(eqn.primitive.name)
+        if kind is not None:
+            yield eqn, kind, eqn_axes(eqn)
+
+
+def aval_size_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def aval_nelem(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0

@@ -1,0 +1,269 @@
+"""AST contract linter — the repo's architectural contracts as checkable
+rules (C = contract; no jax import anywhere in this module, so it runs
+before a test session ever pays the jax startup cost).
+
+Rules:
+
+  C001  single resolution point — the raw JAX collective surface
+        (``shard_map`` and the ``lax`` communication collectives: psum,
+        pmean, pmax, pmin, ppermute, all_gather, all_to_all, psum_scatter,
+        reduce_scatter) may be touched ONLY by
+        ``src/repro/parallel/collectives.py``. Everything else goes through
+        that shim (or ``CommCtx``), which is what keeps the repo portable
+        across JAX API drift and gives the wire auditor one place to tag
+        dp-axis semantics. Generalizes
+        tests/test_collectives.py::test_single_resolution_point from the
+        shard_map API to the whole collective surface.
+  C002  optimizer contract — every ``Optimizer(...)`` construction passes
+        ``dx_scale`` AND ``fused_kernel`` explicitly. Each was silently
+        defaulted once (the §4.1 momentum rescale in PR 1, the fused
+        capability flag in PR 4); an explicit kwarg makes a new optimizer
+        declare its answer instead of inheriting one.
+  C003  codec locality — every ``WireFormat`` subclass lives under
+        ``src/repro/wire/``: the codec registry, the psum-safety tests and
+        the auditor's chain proof all enumerate that package.
+
+Suppression: end the offending line (or the line above it) with
+
+    # lint: allow(C001) -- <justification>
+
+A non-empty justification is REQUIRED; a bare allow is itself a violation.
+
+CLI: ``python -m repro.analysis.lint src/ [more paths]`` — prints
+violations, exits non-zero if any.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["LINT_RULES", "LintViolation", "lint_source", "lint_paths", "main"]
+
+BANNED_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "ppermute", "all_gather",
+    "all_to_all", "psum_scatter", "reduce_scatter", "shard_map",
+})
+
+# module paths whose attributes are the raw surface
+_RAW_MODULES = ("jax.lax", "jax", "jax.experimental.shard_map",
+                "jax.experimental")
+
+_SHIM = "parallel/collectives.py"
+
+LINT_RULES = {
+    "C001": "raw shard_map/lax collectives only in parallel/collectives.py",
+    "C002": "Optimizer(...) must pass dx_scale and fused_kernel explicitly",
+    "C003": "WireFormat subclasses must live under src/repro/wire/",
+}
+
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\((?P<rules>[A-Z0-9,\s]+)\)\s*(?:--\s*(?P<why>.*\S))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _allowances(lines: Sequence[str]) -> Dict[int, Dict[str, Optional[str]]]:
+    """1-based line -> {rule: justification|None}; an allow comment covers
+    its own line and the line below it."""
+    out: Dict[int, Dict[str, Optional[str]]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        rules = [r.strip() for r in m.group("rules").split(",") if r.strip()]
+        why = m.group("why")
+        for ln in (i, i + 1):
+            d = out.setdefault(ln, {})
+            for r in rules:
+                d[r] = why
+    return out
+
+
+class _Imports(ast.NodeVisitor):
+    """name in this module -> the dotted jax path it denotes (if any)."""
+
+    def __init__(self):
+        self.names: Dict[str, str] = {}
+
+    def visit_Import(self, node):
+        for a in node.names:
+            self.names[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0]
+            )
+
+    def visit_ImportFrom(self, node):
+        mod = node.module or ""
+        for a in node.names:
+            self.names[a.asname or a.name] = f"{mod}.{a.name}" if mod else a.name
+
+
+def _dotted(node) -> Optional[str]:
+    """Attribute/Name chain -> dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _resolve(dotted: str, names: Dict[str, str]) -> str:
+    head, _, rest = dotted.partition(".")
+    base = names.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def lint_source(source: str, path: str = "<string>") -> List[LintViolation]:
+    """Lint one module's source. `path` is used for rule scoping (the shim
+    exemption, the wire-package check) and reporting — pass a path
+    relative to the repo root when you have one."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintViolation("C000", path, e.lineno or 0,
+                              f"syntax error: {e.msg}")]
+    lines = source.splitlines()
+    allows = _allowances(lines)
+    imports = _Imports()
+    imports.visit(tree)
+    names = imports.names
+    norm = path.replace("\\", "/")
+    is_shim = norm.endswith(_SHIM)
+    in_wire_pkg = "/wire/" in norm or norm.endswith("/wire")
+
+    found: List[LintViolation] = []
+
+    def emit(rule: str, line: int, msg: str):
+        allow = allows.get(line, {}).get(rule, "missing")
+        if allow is None:
+            found.append(LintViolation(
+                rule, path, line,
+                f"allow({rule}) needs a justification: "
+                f"`# lint: allow({rule}) -- <why>`",
+            ))
+        elif allow == "missing":
+            found.append(LintViolation(rule, path, line, msg))
+        # else: suppressed with a recorded justification
+
+    for node in ast.walk(tree):
+        # ---- C001: raw collective surface -----------------------------
+        if not is_shim:
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod in _RAW_MODULES:
+                    for a in node.names:
+                        if a.name in BANNED_COLLECTIVES:
+                            emit(
+                                "C001", node.lineno,
+                                f"importing {a.name!r} from {mod} — route it "
+                                f"through repro.parallel.collectives "
+                                f"({LINT_RULES['C001']})",
+                            )
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                dotted = _dotted(node)
+                if dotted and "." in dotted:
+                    resolved = _resolve(dotted, names)
+                    mod, _, member = resolved.rpartition(".")
+                    if member in BANNED_COLLECTIVES and mod in _RAW_MODULES:
+                        emit(
+                            "C001", node.lineno,
+                            f"raw {resolved} — route it through "
+                            f"repro.parallel.collectives "
+                            f"({LINT_RULES['C001']})",
+                        )
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                target = names.get(node.func.id, "")
+                mod, _, member = target.rpartition(".")
+                if member in BANNED_COLLECTIVES and mod in _RAW_MODULES:
+                    emit(
+                        "C001", node.lineno,
+                        f"call to {target} (imported as {node.func.id!r}) — "
+                        f"route it through repro.parallel.collectives",
+                    )
+
+        # ---- C002: Optimizer(...) contract ----------------------------
+        if isinstance(node, ast.Call):
+            callee = None
+            if isinstance(node.func, ast.Name):
+                callee = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                callee = node.func.attr
+            if callee == "Optimizer":
+                kw = {k.arg for k in node.keywords}
+                missing = [k for k in ("dx_scale", "fused_kernel")
+                           if k not in kw]
+                if missing and None not in kw:  # **kwargs splat: can't tell
+                    emit(
+                        "C002", node.lineno,
+                        f"Optimizer(...) without explicit "
+                        f"{' and '.join(missing)} — every optimizer must "
+                        f"declare its §4.1 Δx rescale and its fused-kernel "
+                        f"capability ({LINT_RULES['C002']})",
+                    )
+
+        # ---- C003: WireFormat locality --------------------------------
+        if isinstance(node, ast.ClassDef) and not in_wire_pkg:
+            for base in node.bases:
+                base_name = (
+                    base.id if isinstance(base, ast.Name)
+                    else base.attr if isinstance(base, ast.Attribute)
+                    else None
+                )
+                if base_name == "WireFormat":
+                    emit(
+                        "C003", node.lineno,
+                        f"WireFormat subclass {node.name!r} outside "
+                        f"src/repro/wire/ — the codec registry, psum-safety "
+                        f"tests and wire auditor enumerate that package "
+                        f"({LINT_RULES['C003']})",
+                    )
+    # de-duplicate (an Attribute inside a Call is visited twice)
+    uniq = {}
+    for v in found:
+        uniq.setdefault((v.rule, v.line, v.message), v)
+    return sorted(uniq.values(), key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_paths(paths: Sequence[str]) -> List[LintViolation]:
+    out: List[LintViolation] = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            out.extend(lint_source(f.read_text(), str(f)))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if not args:
+        print("usage: python -m repro.analysis.lint <path> [path ...]")
+        return 2
+    violations = lint_paths(args)
+    for v in violations:
+        print(v)
+    print(f"lint: {len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

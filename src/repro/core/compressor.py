@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel import collectives as coll
+
 from repro.core.comm import CommCtx, fold_worker_key
 from repro.core.stats import DxStats, TreeDims, local_tree_dims
 from repro.wire import DenseInt, WireFormat, make_wire_format
@@ -260,7 +262,7 @@ class IntSGD(Compressor):
         ints, alphas = self.encode_ints(
             state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
-        max_local = lax.pmax(tree_abs_max(ints), ctx.axes)
+        max_local = coll.pmax(tree_abs_max(ints), ctx.axes)
         # THE wire: codec-packed integer all-reduce. On TPU this is the ICI
         # collective carrying only integer transport words — the paper's
         # INA/all-reduce analog, at bits/8 bytes per coordinate for the
@@ -536,10 +538,10 @@ class PowerSGD(Compressor):
                 return None
             m2 = m.reshape(m.shape[0], -1).astype(jnp.float32)
             p = m2 @ q  # (rows, rank)
-            p = lax.psum(p, ctx.axes) / n  # all-reduce #1 (small!)
+            p = coll.psum(p, ctx.axes) / n  # all-reduce #1 (small!)
             p_hat = self._orthonormalize(p)
             qn = m2.T @ p_hat  # (cols, rank)
-            qn = lax.psum(qn, ctx.axes) / n  # all-reduce #2
+            qn = coll.psum(qn, ctx.axes) / n  # all-reduce #2
             approx = (p_hat @ qn.T).reshape(m.shape)
             return approx, qn
 
@@ -554,7 +556,7 @@ class PowerSGD(Compressor):
 
         def pick_ghat(m, o):
             if o is None:
-                return lax.psum(m, ctx.axes) / n  # uncompressed small tensors
+                return coll.psum(m, ctx.axes) / n  # uncompressed small tensors
             return o[0]
 
         def pick_q(o, q_old):
@@ -601,7 +603,7 @@ class SignSGD(Compressor):
             signs = jnp.sign(w32).astype(jnp.int8)
             local = scale * signs.astype(jnp.float32)  # C(p_i), what worker i sends
             # wire: int8 sign psum + one scalar psum (all-reduce compatible)
-            ghat_leaf = lax.psum(local, ctx.axes) / n
+            ghat_leaf = coll.psum(local, ctx.axes) / n
             return ghat_leaf, local
 
         outs = jax.tree.map(comp, work)
@@ -755,7 +757,7 @@ class IntDIANA(Compressor):
         ints, alphas = self.encode_ints(
             state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
-        max_local = lax.pmax(tree_abs_max(ints), ctx.axes)
+        max_local = coll.pmax(tree_abs_max(ints), ctx.axes)
         # local shift: h_i += Q(g_i - h_i) = (1/α) Int(α (g_i - h_i))
         h_local = jax.tree.map(
             lambda h, s, a: h + s.astype(jnp.float32) / a,

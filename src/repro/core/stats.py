@@ -14,6 +14,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import collectives as coll
+
 from repro.utils.tree import tree_size
 
 
@@ -64,9 +66,7 @@ def scale_dx_stats(stats: DxStats, scale: float) -> DxStats:
 def psum_stats(stats: DxStats, axis: Optional[str]) -> DxStats:
     if axis is None:
         return stats
-    from jax import lax
-
     return DxStats(
-        sq=lax.psum(stats.sq, axis),
-        leaf_sq=jax.tree.map(lambda s: lax.psum(s, axis), stats.leaf_sq),
+        sq=coll.psum(stats.sq, axis),
+        leaf_sq=jax.tree.map(lambda s: coll.psum(s, axis), stats.leaf_sq),
     )

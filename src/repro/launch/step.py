@@ -85,7 +85,7 @@ def _replicated_mask(pspecs):
 def _fix_replicated_grads(grads, rep_mask, model_axis):
     """Replicated params receive partial grads on each TP member; sum them."""
     return jax.tree.map(
-        lambda g, rep: lax.psum(g, model_axis) if rep else g, grads, rep_mask
+        lambda g, rep: coll.psum(g, model_axis) if rep else g, grads, rep_mask
     )
 
 
@@ -99,7 +99,7 @@ def _global_reduce_leaf_sq(leaf_sq, rep_mask, model_axis) -> DxStats:
     if model_axis is not None:
         sharded_vec = jnp.where(jnp.asarray(reps), 0.0, vec)
         rep_vec = jnp.where(jnp.asarray(reps), vec, 0.0)
-        vec = lax.psum(sharded_vec, model_axis) + rep_vec
+        vec = coll.psum(sharded_vec, model_axis) + rep_vec
     leaf_sq = jax.tree.unflatten(treedef, list(vec))
     return DxStats(sq=jnp.sum(vec), leaf_sq=leaf_sq)
 
@@ -121,6 +121,9 @@ class StepArtifacts:
     in_shardings: tuple
     out_shardings: Any
     abstract_state: Any  # init-time state structs (for real runs)
+    audit_spec: Any = None  # wire_audit.WireSpec declaring the step's
+    # (dp axes, codec, n_workers, n_accum) contract — what the static
+    # auditor proves the traced jaxpr against
 
 
 def _zero1_shapes_global(local_state, tp):
@@ -489,7 +492,7 @@ def _make_train_body(
                 layout, loss_fn, compressor, cs, params, batch, akey, eta,
                 microbatches,
             )
-            metrics = (lax.pmax(max_int, m_axes), lax.pmax(bits, m_axes))
+            metrics = (coll.pmax(max_int, m_axes), coll.pmax(bits, m_axes))
         else:
             if microbatches > 1:
                 loss, grads = _accum_grad_stage(
@@ -513,8 +516,8 @@ def _make_train_body(
                         dims=layout.dims,
                     )
                 metrics = (
-                    lax.pmax(m.max_int, m_axes),
-                    lax.pmax(m.bits_per_coord, m_axes),
+                    coll.pmax(m.max_int, m_axes),
+                    coll.pmax(m.bits_per_coord, m_axes),
                 )
 
         # replicated global shift the fused decode must add (IntDIANA's
@@ -555,7 +558,7 @@ def _make_train_body(
             )
         cs = _observe_dx(layout, compressor, base_opt, cs, new_params, params)
         new_comp = _restack_comp(cs, comp_state)
-        loss_g = lax.psum(loss, layout.dp) / layout.n_dp
+        loss_g = coll.psum(loss, layout.dp) / layout.n_dp
         return new_params, new_opt, new_comp, loss_g, metrics
 
     return step
@@ -639,8 +642,12 @@ def build_train_step(
     overlap: str = "off",
     bucket_words: int = bucketing.DEFAULT_BUCKET_WORDS,
     microbatches: int = 1,
+    verify: Optional[str] = None,
 ) -> StepArtifacts:
     from repro.launch.inputs import input_specs
+
+    if verify not in (None, "static"):
+        raise ValueError(f"verify must be None or 'static', got {verify!r}")
 
     if wire is not None:
         # config-level codec selection: rebind the compressor's transport
@@ -729,13 +736,35 @@ def build_train_step(
         jax.ShapeDtypeStruct((2,), jnp.uint32),
         batch_struct,
     )
-    return StepArtifacts(
+    # declare the wire contract the static auditor proves the trace against
+    # (float-wire baselines like NoCompression have no codec and no spec)
+    wf = getattr(compressor, "wire_format", None)
+    if wf is not None:
+        from repro.analysis.wire_audit import spec_for_step
+
+        audit_spec = spec_for_step(
+            layout, wf, n_accum=microbatches, fused=fused
+        )
+    else:
+        audit_spec = None
+    artifacts = StepArtifacts(
         jitted={"compressed": make(False), "exact": make(True)},
         arg_structs=arg_structs,
         in_shardings=coll.named_shardings(mesh, in_specs),
         out_shardings=coll.named_shardings(mesh, out_specs),
         abstract_state=None,
+        audit_spec=audit_spec,
     )
+    if verify == "static":
+        if audit_spec is None:
+            raise ValueError(
+                "verify='static' needs an integer wire to prove; "
+                f"compressor {type(compressor).__name__} has no wire_format"
+            )
+        from repro.analysis.wire_audit import audit_step
+
+        audit_step(artifacts).raise_if_failed()
+    return artifacts
 
 
 def build_init_state(
@@ -831,7 +860,7 @@ def build_eval_step(
 
     def body(params, batch):
         loss = loss_fn(params, batch, layout.axes, layout.cfg, dtype=jnp.bfloat16)
-        return lax.psum(loss, layout.dp) / layout.n_dp
+        return coll.psum(loss, layout.dp) / layout.n_dp
 
     in_specs = (layout.pspecs, batch_specs)
     jitted = _sharded(layout, body, in_specs, P())

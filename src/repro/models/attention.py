@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel import collectives as coll
+
 from repro.models.common import Axes, HeadLayout, dense_init, rope
 
 NEG_INF = -1e30
@@ -195,15 +197,15 @@ def attention_decode(
     logits = jnp.where(mask, logits, NEG_INF)
     m_loc = jnp.max(logits, axis=-1)
     if axes.sp:
-        m = lax.pmax(m_loc, axes.sp)
+        m = coll.pmax(m_loc, axes.sp)
     else:
         m = m_loc
     p = jnp.exp(logits - m[..., None])
     s = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
     if axes.sp:
-        s = lax.psum(s, axes.sp)
-        acc = lax.psum(acc, axes.sp)
+        s = coll.psum(s, axes.sp)
+        acc = coll.psum(acc, axes.sp)
     out = (acc / jnp.maximum(s, 1e-30)[..., None]).reshape(b, 1, nq * dh)
     out = jnp.einsum("btk,kd->btd", out.astype(x.dtype), params["wo"].astype(x.dtype))
     out = axes.psum_tp(out)

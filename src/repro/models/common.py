@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel import collectives as coll
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -65,10 +67,10 @@ class Axes:
         # re-running them in the backward pass (§Perf "save_psum" policy)
         from jax.ad_checkpoint import checkpoint_name
 
-        return checkpoint_name(lax.psum(x, self.tp), "tp_psum")
+        return checkpoint_name(coll.psum(x, self.tp), "tp_psum")
 
     def pmax_tp(self, x):
-        return lax.pmax(x, self.tp) if self.tp else x
+        return coll.pmax(x, self.tp) if self.tp else x
 
 
 SINGLE = Axes()

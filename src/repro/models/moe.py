@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel import collectives as coll
+
 from repro.models.common import Axes, dense_init, swiglu
 from repro.models.mlp import init_swiglu, swiglu_mlp
 
@@ -141,7 +143,7 @@ def moe_ep(params, x, axes: Axes, *, n_experts, top_k, capacity_factor=1.25):
     buf = buf.at[owner, sub, slot].add(jnp.where(keep[:, None], src, 0))
     if axes.tp:
         # exchange: device i sends buf[j] to device j -> receives (tp, e_loc, C, d)
-        buf = lax.all_to_all(buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
+        buf = coll.all_to_all(buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
         buf = buf.reshape(tp, e_loc, capacity, d)
     # expert FFN on owned experts over all received tokens: fold sender dim
     recv = buf.transpose(1, 0, 2, 3).reshape(e_loc, tp * capacity, d)
@@ -151,7 +153,7 @@ def moe_ep(params, x, axes: Axes, *, n_experts, top_k, capacity_factor=1.25):
     out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
     out_buf = out_buf.reshape(e_loc, tp, capacity, d).transpose(1, 0, 2, 3)
     if axes.tp:
-        out_buf = lax.all_to_all(out_buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
+        out_buf = coll.all_to_all(out_buf, axes.tp, split_axis=0, concat_axis=0, tiled=True)
         out_buf = out_buf.reshape(tp, e_loc, capacity, d)
     picked = out_buf[owner, sub, slot]
     wk = (w.reshape(-1) * keep).astype(x.dtype)

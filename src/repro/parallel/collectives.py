@@ -140,6 +140,28 @@ def linear_axis_index(axes: Sequence[str], sizes: Sequence[int]):
     return idx
 
 
+def psum(v, axes):
+    """Single-array float/int psum. The sanctioned spelling of ``lax.psum``
+    everywhere outside this module (linter rule C001): model-axis activation
+    reductions and the scalar loss/metric reductions the wire auditor's
+    W001 allowance covers. Gradient-sized dp-axis payloads do NOT belong
+    here — they ride :func:`psum_wire_words` as integers."""
+    return lax.psum(v, axes)
+
+
+def pmax(v, axes):
+    """Single-array pmax (see :func:`psum` for the C001 contract)."""
+    return lax.pmax(v, axes)
+
+
+def all_to_all(v, axis: str, *, split_axis: int, concat_axis: int,
+               tiled: bool = False):
+    """Portable ``lax.all_to_all`` (MoE expert-parallel shuffles)."""
+    return lax.all_to_all(
+        v, axis, split_axis=split_axis, concat_axis=concat_axis, tiled=tiled
+    )
+
+
 def psum_tree(x, axes):
     return jax.tree.map(lambda v: lax.psum(v, axes), x)
 

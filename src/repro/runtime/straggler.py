@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.parallel import collectives as coll
 
 from repro.core.comm import CommCtx
 from repro.wire import DenseInt, WireFormat
@@ -60,7 +61,7 @@ def straggler_tolerant_sum(
     a = alive.astype(jnp.int32)
     masked = jax.tree.map(lambda v: v * a, ints_tree)
     _, int_sum = ctx.psum_wire(masked, wf)
-    n_live = lax.psum(a, ctx.axes)
+    n_live = coll.psum(a, ctx.axes)
     return int_sum, n_live
 
 

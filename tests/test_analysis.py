@@ -1,0 +1,594 @@
+"""PR 8: the floatless-wire static verifier + repo contract linter.
+
+Three layers under test:
+
+  * the §5.1 CHAIN PROOF (`repro.analysis.intervals.wire_chain_proof`) —
+    symbolic intervals for encode → accumulate → pack → ring-sum → unpack,
+    checked sound against concrete executions of the real wire codecs;
+  * the JAXPR AUDITOR (`repro.analysis.wire_audit`) — planted-bug tests:
+    each W-rule must flag its bug by rule id, and clean builds must not;
+  * the AST LINTER (`repro.analysis.lint`) — C-rule unit tests on inline
+    sources plus the repo-wide lint-clean check.
+"""
+import os
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from conftest import REPO, run_forced_mesh as _run
+
+from repro.analysis import intervals as iv
+from repro.analysis import jaxpr_walk as jw
+from repro.analysis import lint as lint_mod
+from repro.analysis import wire_audit as wa
+from repro.configs import ShapeConfig, get_arch, smoke_config
+from repro.core import make_compressor
+from repro.launch.step import build_train_step
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.parallel import collectives as coll
+from repro.wire import make_wire_format
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SRC = os.path.join(REPO, "src")
+
+
+# ---------------------------------------------------------------------------
+# toy tracing helpers: a 1-device ("data",) mesh keeps the psum eqns in the
+# jaxpr (vmap batching would erase them); the SPEC declares the worker count
+# the static proof reasons about — the audit never looks at real devices.
+# ---------------------------------------------------------------------------
+def _toy_jaxpr(body, *structs):
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import PartitionSpec as P
+
+    sm = coll.shard_map(
+        body, mesh=mesh, in_specs=(P(),) * len(structs), out_specs=P()
+    )
+    return jax.make_jaxpr(sm)(*structs)
+
+
+def _spec(**kw):
+    base = dict(
+        dp_axes=("data",), axis_sizes={"data": 4}, n_workers=4,
+        wire_kind="dense", bits=8,
+    )
+    base.update(kw)
+    return wa.WireSpec(**base)
+
+
+F32 = jax.ShapeDtypeStruct((4, 256), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# W001: a float tensor on a reducing dp collective
+# ---------------------------------------------------------------------------
+def test_w001_raw_float_psum_flagged():
+    def step(x):
+        return lax.psum(x * 2.0, "data")  # the float-wire bug
+
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32), _spec())
+    assert not rep.ok
+    w = [v for v in rep.violations if v.rule == "W001"]
+    assert w, rep.violations
+    assert "float32" in w[0].message and "psum" in w[0].where
+
+
+def test_w001_scalar_loss_reduction_allowed():
+    def step(x):
+        loss = jnp.mean(x)
+        return lax.psum(loss, "data")  # scalar metrics are legal
+
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32), _spec())
+    assert rep.ok, rep.violations
+    assert rep.stats["scalar_float_reduces"] >= 1
+
+
+def test_w001_bf16_param_all_gather_allowed():
+    def step(x):
+        return lax.all_gather(x.astype(jnp.bfloat16), "data")
+
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32), _spec())
+    assert rep.ok, rep.violations  # gathers move data, they don't combine it
+
+
+# ---------------------------------------------------------------------------
+# W002: unbounded / overflowing integer wire
+# ---------------------------------------------------------------------------
+def test_w002_unclipped_int_wire_flagged():
+    def step(x):
+        ints = jnp.round(x * 1000.0).astype(jnp.int32)  # no §5.1 clip
+        return lax.psum(ints, "data")
+
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32), _spec(bits=32))
+    assert not rep.ok
+    w = [v for v in rep.violations if v.rule == "W002"]
+    assert w and "not provably bounded" in w[0].message
+
+
+def test_w002_degenerate_clip_257_contributions_int8():
+    """127 // 257 == 0: every coordinate clips to zero.  The proof refuses
+    the configuration outright — WireRangeError as a static property."""
+    proof = iv.wire_chain_proof("dense", 8, 257)
+    assert not proof.ok
+    assert [c for c, _ in proof.violations] == ["degenerate-clip"]
+
+    # and through the audit surface, attached to a clean jaxpr
+    def step(x):
+        return lax.psum(jnp.mean(x), "data")
+
+    rep = wa.audit_jaxpr(
+        _toy_jaxpr(step, F32), _spec(n_workers=257, bits=8)
+    )
+    assert not rep.ok
+    assert any(
+        v.rule == "W002" and v.where == "chain:degenerate-clip"
+        for v in rep.violations
+    )
+
+
+def test_w002_forgot_naccum_fails_reproof():
+    """64 workers × 16 microbatches on int16 clips at clip_limit(n·M); a
+    clip at clip_limit(n) alone overflows the pipelined lane sum."""
+    ok = iv.wire_chain_proof("dense", 16, 64, 16)
+    assert ok.ok, ok.violations
+    loose = iv.safe_clip_limit(64, 16)  # forgot ×M
+    bad = iv.wire_chain_proof("dense", 16, 64, 16, lim=loose)
+    assert not bad.ok
+    assert "lane-overflow" in [c for c, _ in bad.violations]
+
+
+def test_w002_lane_overflow_loose_clip_flagged():
+    def step(x):
+        ints = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+        return lax.psum(ints, "data")
+
+    # ±127 per worker is fine for n=1 but the declared spec says 4 workers
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32), _spec())
+    assert not rep.ok
+    assert any(
+        v.rule == "W002" and "lane" in v.message for v in rep.violations
+    )
+
+
+def test_w002_observed_clip_looser_than_packed_spec():
+    """int32 lanes can't overflow a dtype check — only the observed-clip
+    re-proof catches a clip looser than the packed guard-bit budget."""
+    def step(x):
+        ints = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int32)
+        return lax.psum(ints, "data")
+
+    rep = wa.audit_jaxpr(
+        _toy_jaxpr(step, F32), _spec(wire_kind="packed", bits=8)
+    )
+    assert rep.stats["clips_checked"] >= 1
+    assert not rep.ok
+    assert any(
+        v.rule == "W002" and "looser than the declared" in v.message
+        for v in rep.violations
+    )
+
+
+def test_w002_data_path_clip_not_mistaken_for_wire_clip():
+    """A token-id style clip feeding the model through a gather must NOT be
+    attributed to the wire (the clip-walk stops at non-wire primitives)."""
+    def step(x, tok):
+        tok = jnp.clip(tok, 0, 255)  # data-path clip, way out of §5.1 range
+        emb = jnp.take(x, tok.reshape(-1) % 4, axis=0)
+        g = jnp.round(emb)
+        ints = jnp.clip(g, -31, 31).astype(jnp.int8)  # the real wire clip
+        return lax.psum(ints, "data")
+
+    tok_struct = jax.ShapeDtypeStruct((4, 16), jnp.int32)
+    rep = wa.audit_jaxpr(_toy_jaxpr(step, F32, tok_struct), _spec())
+    assert rep.ok, rep.violations  # 31 == clip_limit(4) — in contract
+    assert rep.stats["clips_checked"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# W003: fused route must consume packed words, not an HBM-sized image
+# ---------------------------------------------------------------------------
+def _fused_spec(**kw):
+    return _spec(
+        wire_kind="packed", bits=8, use_kernels=True, fused=True, **kw
+    )
+
+
+def test_w003_image_roundtrip_into_kernel_flagged():
+    kops = pytest.importorskip("repro.kernels.ops")
+
+    def step(image, param, mom):
+        scal = jnp.ones((5,), jnp.float32)
+        p, (m,), _ = kops.fused_apply(
+            image, param, (mom,), scal, kernel="sgd", interpret=True
+        )
+        return p + 0.0 * m
+
+    structs = (
+        jax.ShapeDtypeStruct((1024,), jnp.int32),  # image-sized: the bug
+        jax.ShapeDtypeStruct((1024,), jnp.float32),
+        jax.ShapeDtypeStruct((1024,), jnp.float32),
+    )
+    closed = jax.make_jaxpr(step)(*structs)
+    rep = wa.audit_jaxpr(closed, _fused_spec())
+    assert rep.stats["pallas_calls"] >= 1
+    assert any(v.rule == "W003" for v in rep.violations), rep.violations
+
+
+def test_w003_packed_words_into_kernel_clean():
+    kops = pytest.importorskip("repro.kernels.ops")
+
+    def step(words, param, mom):
+        scal = jnp.ones((5,), jnp.float32)
+        p, (m,), _ = kops.fused_unpack_apply(
+            words, param, (mom,), scal, None,
+            kernel="sgd", bits=8, n_summed=4, interpret=True,
+        )
+        return p + 0.0 * m
+
+    structs = (
+        jax.ShapeDtypeStruct((256,), jnp.int32),  # 1024 int8 fields / 4
+        jax.ShapeDtypeStruct((1024,), jnp.float32),
+        jax.ShapeDtypeStruct((1024,), jnp.float32),
+    )
+    closed = jax.make_jaxpr(step)(*structs)
+    rep = wa.audit_jaxpr(closed, _fused_spec())
+    assert not [v for v in rep.violations if v.rule == "W003"], rep.violations
+
+
+# ---------------------------------------------------------------------------
+# suppression (audit side)
+# ---------------------------------------------------------------------------
+def test_audit_suppress_requires_justification():
+    def step(x):
+        return lax.psum(x, "data")
+
+    closed = _toy_jaxpr(step, F32)
+    with pytest.raises(ValueError, match="justification"):
+        wa.audit_jaxpr(closed, _spec(), suppress={"W001": "  "})
+    with pytest.raises(ValueError, match="unknown rule"):
+        wa.audit_jaxpr(closed, _spec(), suppress={"W9": "x"})
+    rep = wa.audit_jaxpr(
+        closed, _spec(), suppress={"W001": "toy float wire,測定 only"}
+    )
+    assert rep.ok
+    assert rep.suppressed and rep.suppressed[0][0].rule == "W001"
+
+
+# ---------------------------------------------------------------------------
+# clean real build: the audit passes on an actual train step, and
+# build_train_step(verify="static") wires it in
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_clean_step_audit_passes(mesh11):
+    cfg = smoke_config(get_arch("xlstm-125m"))
+    shape = ShapeConfig("t", 32, 4, "train")
+    art = build_train_step(
+        cfg, mesh11, shape,
+        compressor=make_compressor("intsgd", bits=8, wire="packed8"),
+        base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1),
+        microbatches=2,
+    )
+    assert art.audit_spec is not None
+    assert art.audit_spec.wire_kind == "packed"
+    assert art.audit_spec.n_accum == 2
+    rep = wa.audit_step(art)
+    assert rep.ok, rep.violations
+    assert rep.stats["int_wire_ops"] >= 1
+    assert rep.stats["clips_checked"] >= 1
+
+
+def test_build_train_step_verify_static(mesh11):
+    cfg = smoke_config(get_arch("xlstm-125m"))
+    shape = ShapeConfig("t", 32, 4, "train")
+    art = build_train_step(
+        cfg, mesh11, shape,
+        compressor=make_compressor("intsgd", wire="dense32"),
+        base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1),
+        verify="static",
+    )
+    assert art.audit_spec.wire_kind == "dense"
+    with pytest.raises(ValueError, match="verify"):
+        build_train_step(
+            cfg, mesh11, shape,
+            compressor=make_compressor("intsgd", wire="dense32"),
+            base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1),
+            verify="dynamic",
+        )
+
+
+def test_forced_mesh_audit_four_workers():
+    """The real 4-device trace (ring transport included) passes the audit."""
+    _run(
+        textwrap.dedent(
+            """
+            import jax
+            from repro.analysis import wire_audit
+            from repro.configs import ShapeConfig, get_arch, smoke_config
+            from repro.core import make_compressor
+            from repro.launch.step import build_train_step
+            from repro.optim import sgd
+            from repro.optim.schedules import constant
+
+            mesh = jax.make_mesh((4, 1), ("data", "model"))
+            art = build_train_step(
+                smoke_config(get_arch("xlstm-125m")), mesh,
+                ShapeConfig("t", 32, 8, "train"),
+                compressor=make_compressor("intsgd", bits=8, wire="packed8"),
+                base_opt=sgd(momentum=0.9), lr_schedule=constant(0.1),
+                tp_override=1, overlap="ring", microbatches=2,
+            )
+            rep = wire_audit.audit_step(art)
+            assert rep.ok, rep.violations
+            assert rep.spec.n_workers == 4 and rep.spec.n_accum == 2
+            assert rep.stats["int_wire_ops"] >= 1
+            print("forced-mesh audit ok")
+            """
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# chain-proof soundness: concrete executions of the real codecs stay inside
+# the statically derived stage intervals
+# ---------------------------------------------------------------------------
+def _concrete_chain(kind, bits, n, M, seed, size=64):
+    """Run encode→accumulate→pack→wrap-sum→unpack with the real codec and
+    return (per-stage concrete extrema, unpacked image, true sum)."""
+    wf = make_wire_format(f"{kind}{bits}")
+    rng = np.random.default_rng(seed)
+    lim = iv.safe_clip_limit(n * M, bits)
+    # per-worker M-microbatch accumulators of §5.1-clipped integers
+    imgs = rng.integers(-lim, lim + 1, size=(n, M, size))
+    accum = imgs.sum(axis=1)  # local M-sum, one per worker
+    packed = [
+        np.asarray(wf.pack(jnp.asarray(a, jnp.int32), n_workers=n))
+        for a in accum
+    ]
+    wire = packed[0].astype(np.int32)
+    partial_mags = [np.abs(wire).max()]
+    for p in packed[1:]:
+        wire = (wire.astype(np.int64) + p).astype(np.int32)  # wrap add
+        partial_mags.append(np.abs(wire).max())
+    out_shape = (size,) if kind == "packed" else accum[0].shape
+    image = np.asarray(wf.unpack(jnp.asarray(wire), out_shape, n_summed=n))
+    return {
+        "encode": int(np.abs(imgs).max()),
+        "accum": int(np.abs(accum).max()),
+        "image": image.reshape(-1)[:size],
+        "true": accum.sum(axis=0).reshape(-1)[:size],
+        "partial_ok": kind == "packed" or max(partial_mags) <= iv.int_range_max(bits),
+    }
+
+
+_CHAIN_GRID = [
+    (kind, bits, n, M)
+    for kind, bits in (
+        ("dense", 4), ("dense", 8), ("dense", 16), ("dense", 32),
+        ("packed", 4), ("packed", 8), ("packed", 16),
+    )
+    for n in (1, 2, 4)
+    for M in (1, 3)
+    # degenerate points (clip_limit(n·M) == 0, e.g. int4 × 12 contributions)
+    # are covered by test_w002_degenerate_clip_257_contributions_int8
+    if iv.safe_clip_limit(n * M, bits) > 0
+]
+
+
+@pytest.mark.parametrize("kind,bits,n,M", _CHAIN_GRID)
+def test_chain_proof_sound_vs_concrete(kind, bits, n, M):
+    proof = iv.wire_chain_proof(kind, bits, n, M)
+    assert proof.ok, proof.violations
+    got = _concrete_chain(kind, bits, n, M, seed=hash((kind, bits, n, M)) % 2**31)
+    assert got["encode"] <= proof.stages["encode"].mag
+    assert got["accum"] <= proof.stages["accum"].mag
+    assert got["partial_ok"]
+    np.testing.assert_array_equal(got["image"], got["true"])
+    assert proof.stages["image_sum"].contains(int(got["image"].min()))
+    assert proof.stages["image_sum"].contains(int(got["image"].max()))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        cfg=st.sampled_from(_CHAIN_GRID),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_chain_proof_sound_property(cfg, seed):
+        kind, bits, n, M = cfg
+        proof = iv.wire_chain_proof(kind, bits, n, M)
+        got = _concrete_chain(kind, bits, n, M, seed)
+        assert got["encode"] <= proof.stages["encode"].mag
+        assert got["accum"] <= proof.stages["accum"].mag
+        np.testing.assert_array_equal(got["image"], got["true"])
+        assert proof.stages["image_sum"].contains(int(got["image"].min()))
+        assert proof.stages["image_sum"].contains(int(got["image"].max()))
+
+
+# ---------------------------------------------------------------------------
+# interval evaluator unit checks
+# ---------------------------------------------------------------------------
+def test_interval_eval_scan_unrolled_exactly():
+    def f(x):
+        def body(c, _):
+            return c + x, c
+
+        out, ys = lax.scan(body, jnp.float32(0.0), None, length=5)
+        return out, ys
+
+    closed = jax.make_jaxpr(f)(jnp.float32(1.0))
+    ivals = iv.eval_jaxpr_intervals(
+        closed, [iv.Interval(0.0, 1.0)], axis_sizes={}
+    )
+    assert ivals[0].hi == 5.0  # 5 adds of [0,1], tracked exactly
+    assert ivals[1].hi == 4.0  # ys union across iterations
+
+
+def test_interval_eval_psum_scales_by_axis_product():
+    def step(x):
+        return lax.psum(x, "data")
+
+    closed = _toy_jaxpr(step, jax.ShapeDtypeStruct((8,), jnp.float32))
+    ivals = iv.eval_jaxpr_intervals(
+        closed, [iv.Interval(-1.0, 1.0)], axis_sizes={"data": 4}
+    )
+    assert ivals[0].lo == -4.0 and ivals[0].hi == 4.0
+
+
+# ---------------------------------------------------------------------------
+# the contract linter (C-rules)
+# ---------------------------------------------------------------------------
+def _lint(src, path="src/repro/models/toy.py"):
+    return lint_mod.lint_source(textwrap.dedent(src), path)
+
+
+def test_c001_raw_collective_outside_shim():
+    vs = _lint(
+        """
+        from jax import lax
+
+        def f(x):
+            return lax.psum(x, "data")
+        """
+    )
+    assert [v.rule for v in vs] == ["C001"]
+    assert "parallel/collectives" in vs[0].message
+
+
+def test_c001_shim_module_itself_allowed():
+    vs = _lint(
+        """
+        from jax import lax
+
+        def psum(x, axes):
+            return lax.psum(x, axes)
+        """,
+        path="src/repro/parallel/collectives.py",
+    )
+    assert vs == []
+
+
+def test_c001_suppression_needs_justification():
+    allowed = _lint(
+        """
+        from jax import lax
+
+        def f(x):
+            # lint: allow(C001) -- profiling probe, not a wire path
+            return lax.psum(x, "data")
+        """
+    )
+    assert allowed == []
+    bare = _lint(
+        """
+        from jax import lax
+
+        def f(x):
+            # lint: allow(C001)
+            return lax.psum(x, "data")
+        """
+    )
+    assert any("justification" in v.message for v in bare)
+
+
+def test_c002_optimizer_must_declare_wire_contract():
+    vs = _lint(
+        """
+        from repro.optim.base import Optimizer
+
+        opt = Optimizer(init=None, update=None)
+        """
+    )
+    assert [v.rule for v in vs] == ["C002"]
+    clean = _lint(
+        """
+        from repro.optim.base import Optimizer
+
+        opt = Optimizer(
+            init=None, update=None, dx_scale="eta", fused_kernel="sgd"
+        )
+        """
+    )
+    assert clean == []
+
+
+def test_c003_wireformat_subclass_must_live_under_wire():
+    vs = _lint(
+        """
+        from repro.wire.base import WireFormat
+
+        class Rogue(WireFormat):
+            pass
+        """
+    )
+    assert [v.rule for v in vs] == ["C003"]
+    clean = _lint(
+        """
+        from repro.wire.base import WireFormat
+
+        class Fine(WireFormat):
+            pass
+        """,
+        path="src/repro/wire/newcodec.py",
+    )
+    assert clean == []
+
+
+def test_repo_is_lint_clean():
+    assert lint_mod.lint_paths([SRC]) == []
+
+
+def test_lint_cli_is_jax_free():
+    import subprocess
+    import sys
+
+    r = subprocess.run(
+        [
+            sys.executable, "-c",
+            "import sys; import repro.analysis.lint; "
+            "assert 'jax' not in sys.modules, 'lint imported jax'; "
+            "print('ok')",
+        ],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert r.returncode == 0, r.stderr
+
+
+# ---------------------------------------------------------------------------
+# walker regressions (the two fixed bugs ride the shared layer now)
+# ---------------------------------------------------------------------------
+def test_iter_eqns_covers_cond_sibling_subjaxprs():
+    def f(x):
+        def t(v):
+            return lax.psum(v, "data")
+
+        def fbr(v):
+            return v * 2.0
+
+        return lax.cond(x.sum() > 0, t, fbr, x)
+
+    closed = _toy_jaxpr(f, jax.ShapeDtypeStruct((4,), jnp.float32))
+    names = {e.primitive.name for e in jw.iter_eqns(closed.jaxpr)}
+    assert "psum" in names  # the old walker could skip cond branches
+
+
+def test_collectives_table_has_pmean():
+    assert "pmean" in jw.COLLECTIVES  # missing from the pre-PR8 table
+    assert "pmean" in jw.REDUCING_COLLECTIVES

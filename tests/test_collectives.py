@@ -16,8 +16,10 @@ SRC = os.path.join(
 
 
 def test_single_resolution_point():
-    """Exactly one module in src/ touches the raw shard_map API (the shim);
-    every other call site must go through repro.parallel.collectives."""
+    """Exactly one module in src/ touches the raw shard_map API (the shim).
+    This is the narrow regex ancestor of linter rule C001
+    (repro.analysis.lint), which generalizes it to EVERY raw lax collective
+    surface — kept as a fast standalone regression for the shard_map case."""
     pat = re.compile(r"jax\.shard_map|experimental[. ]shard_map")
     offenders = []
     for root, _, files in os.walk(SRC):
@@ -28,9 +30,13 @@ def test_single_resolution_point():
             with open(path) as fh:
                 if pat.search(fh.read()):
                     offenders.append(os.path.relpath(path, SRC))
-    assert offenders == [os.path.join("repro", "parallel", "collectives.py")], (
-        offenders
-    )
+    allowed = {
+        os.path.join("repro", "parallel", "collectives.py"),  # the shim
+        # the C001 linter names the banned module paths as string data
+        os.path.join("repro", "analysis", "lint.py"),
+    }
+    assert set(offenders) <= allowed, offenders
+    assert os.path.join("repro", "parallel", "collectives.py") in offenders
 
 
 def test_shim_resolves_and_runs():
