@@ -17,11 +17,19 @@ built train step:
     ``packed8`` dp_int row of BENCH_comm_volume.json (bucketing is slicing
     bookkeeping, not re-encoding — zero byte inflation).
 
-``--check`` asserts all three so CI can smoke the overlap contract (see
-.github/workflows/ci.yml). Artifact: ``BENCH_overlap.json`` at the repo
-root, the PR 2 JSON pattern. Runs in a subprocess with 4 forced host
-devices on the same (2 data x 2 model) debug mesh as bench_comm_volume, so
-the byte comparison is apples-to-apples.
+Since PR 9 the runtime counts are no longer the only evidence: each route
+also carries a STATIC column derived by :mod:`repro.analysis.schedule` /
+``traffic`` from the spec alone — declared collective count/bytes
+(``BucketManifest.ring_collectives`` must agree) and the static roofline
+fractions (``hidden``/``interleavable``). ``--check`` asserts
+static == measured per route, and pins the fresh static counts against the
+COMMITTED ``BENCH_overlap.json`` (12 bucketed vs 1 serial on this debug
+mesh), so a transport change must regenerate the artifact explicitly.
+
+Artifact: ``BENCH_overlap.json`` at the repo root, the PR 2 JSON pattern.
+Runs in a subprocess with 4 forced host devices on the same (2 data x 2
+model) debug mesh as bench_comm_volume, so the byte comparison is
+apples-to-apples.
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ from repro.launch.step import build_train_step, resolve_layout
 from repro.optim import sgd
 from repro.optim.schedules import constant
 from repro.wire import PackedInt, plan_buckets
+from repro.analysis import schedule as schedule_mod
 from benchmarks.jaxpr_cost import analyze, summarize, _axes_of, iter_eqns
 
 BUCKET_WORDS = 4096
@@ -81,11 +90,27 @@ def measure(overlap):
     closed = jax.make_jaxpr(fn)(*art.arg_structs)
     counts = count_int_dp_collectives(closed.jaxpr)
     s = summarize(analyze(fn, *art.arg_structs))
+    # the static column: same trace, but counts/bytes DERIVED from the
+    # declared transport model + the dependence-graph roofline (PR 9)
+    rep = schedule_mod.full_audit(closed, art.audit_spec)
+    plan = rep.traffic.plan
     return {
         "collective_eqns": counts,
         "n_int_dp_collectives": sum(counts.values()),
         "dp_int_bytes": s["dp_int_bytes"],
         "dp_bytes": s["dp_bytes"],
+        "static": {
+            "declared_eqns": plan.n_eqns,
+            "declared_bytes": plan.coll_bytes,
+            "observed_eqns": rep.traffic.observed_eqns,
+            "n_serialized": rep.schedule.n_serialized,
+            "hidden_fraction": round(rep.schedule.hidden_fraction, 6),
+            "interleavable_fraction": round(
+                rep.schedule.interleavable_fraction, 6
+            ),
+            "ok": rep.ok,
+            "rules": sorted({v.rule for v in rep.violations}),
+        },
     }
 
 serial = measure("off")
@@ -103,6 +128,11 @@ manifest = plan_buckets(words_struct, bucket_words=BUCKET_WORDS)
 bucketed["n_buckets"] = manifest.n_buckets
 bucketed["manifest_bytes"] = manifest.payload_bytes
 bucketed["bucket_words"] = BUCKET_WORDS
+ring_eqns, ring_bytes = manifest.ring_collectives(
+    tuple(mesh.shape[a] for a in ("data",))
+)
+bucketed["manifest_ring_eqns"] = ring_eqns
+bucketed["manifest_ring_bytes"] = ring_bytes
 print("RESULT " + json.dumps({"serial": serial, "bucketed": bucketed}))
 """
 
@@ -131,6 +161,11 @@ def main(emit=print, check: bool = False):
         return
 
     serial, bucketed = out["serial"], out["bucketed"]
+    artifact_path = os.path.join(repo, "BENCH_overlap.json")
+    committed = None
+    if os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            committed = json.load(f)
     artifact = {
         "mesh": {"data": 2, "model": 2},
         "arch": "granite-8b (smoke)",
@@ -138,19 +173,25 @@ def main(emit=print, check: bool = False):
         "serial": serial,
         "bucketed": bucketed,
     }
-    with open(os.path.join(repo, "BENCH_overlap.json"), "w") as f:
+    with open(artifact_path, "w") as f:
         json.dump(artifact, f, indent=2, sort_keys=True)
 
     emit(
         f"overlap/serial,{serial['n_int_dp_collectives']},"
         f"dp_int_bytes={serial['dp_int_bytes']:.0f}"
         f";eqns={serial['collective_eqns']}"
+        f";static_eqns={serial['static']['declared_eqns']}"
+        f";hidden={serial['static']['hidden_fraction']}"
+        f";inter={serial['static']['interleavable_fraction']}"
     )
     emit(
         f"overlap/bucketed,{bucketed['n_int_dp_collectives']},"
         f"buckets={bucketed['n_buckets']}"
         f";manifest_bytes={bucketed['manifest_bytes']}"
         f";eqns={bucketed['collective_eqns']}"
+        f";static_eqns={bucketed['static']['declared_eqns']}"
+        f";hidden={bucketed['static']['hidden_fraction']}"
+        f";inter={bucketed['static']['interleavable_fraction']}"
     )
 
     if check:
@@ -176,6 +217,45 @@ def main(emit=print, check: bool = False):
                 f"{bucketed['manifest_bytes']} B vs serial psum "
                 f"{serial['dp_int_bytes']:.0f} B"
             )
+        # static == measured, per route: the analyzer's declared transport
+        # must land on exactly the collectives the jaxpr counter sees
+        for name, route in (("serial", serial), ("bucketed", bucketed)):
+            st = route.get("static") or {}
+            if st.get("declared_eqns") != route["n_int_dp_collectives"]:
+                failures.append(
+                    f"{name} route: static transport model declares "
+                    f"{st.get('declared_eqns')} wire collective(s) but the "
+                    f"jaxpr counter measured {route['n_int_dp_collectives']}"
+                )
+            if not st.get("ok", False):
+                failures.append(
+                    f"{name} route: static audit not clean: {st.get('rules')}"
+                )
+        if bucketed["manifest_ring_eqns"] != bucketed["n_int_dp_collectives"]:
+            failures.append(
+                f"BucketManifest.ring_collectives declares "
+                f"{bucketed['manifest_ring_eqns']} eqn(s) but the jaxpr "
+                f"counter measured {bucketed['n_int_dp_collectives']}"
+            )
+        if bucketed["static"]["interleavable_fraction"] != 1.0:
+            failures.append(
+                f"bucketed route's static roofline says only "
+                f"{bucketed['static']['interleavable_fraction']} of wire "
+                f"bytes are interleavable; the bucketed ring promises 1.0"
+            )
+        # committed-artifact gate: fresh STATIC counts must match the
+        # committed measured counts (12 bucketed vs 1 serial on this mesh)
+        if committed is not None:
+            for name, route in (("serial", serial), ("bucketed", bucketed)):
+                was = (committed.get(name) or {}).get("n_int_dp_collectives")
+                now = route["static"]["declared_eqns"]
+                if was is not None and was != now:
+                    failures.append(
+                        f"{name} route: static count {now} drifted from the "
+                        f"committed BENCH_overlap.json count {was} — a "
+                        f"transport change must regenerate the artifact "
+                        f"explicitly"
+                    )
         ref_path = os.path.join(repo, "BENCH_comm_volume.json")
         if os.path.exists(ref_path):
             with open(ref_path) as f:

@@ -1,11 +1,16 @@
-"""repro.analysis — static verification of the repo's contracts (PR 8).
+"""repro.analysis — static verification of the repo's contracts (PR 8/9).
 
-Two layers:
+Three layers:
 
   * the floatless-wire AUDITOR (``jaxpr_walk`` + ``intervals`` +
     ``wire_audit``): jaxpr-level proof that a built train step puts no
     float on the dp wire and that the §5.1 guard-bit/overflow invariants
-    hold for the declared (codec, n_workers, microbatches);
+    hold for the declared (codec, n_workers, microbatches) — W-rules;
+  * the PERFORMANCE auditor (``schedule`` + ``traffic``, PR 9):
+    dependence-graph proof that the wire collectives are overlap-eligible
+    (P-rules + static roofline) and that their bytes/counts equal the
+    declared transport model, i.e. exactly what the ``Logged`` codec meters
+    (T-rules); ``schedule.full_audit`` composes all three families;
   * the AST contract LINTER (``lint``): C-rules over the source tree, no
     jax import anywhere on its path.
 
@@ -13,9 +18,11 @@ This ``__init__`` stays import-light on purpose: ``python -m
 repro.analysis.lint src/`` must be able to run (and fail a CI job) before
 anything imports jax. The audit API is re-exported lazily.
 
-CLI: ``python -m repro.analysis --matrix [--check]`` sweeps the supported
-(config × codec × overlap × microbatch) grid and writes
-``ANALYSIS_report.json``.
+CLI: ``python -m repro.analysis --matrix [--check] [--diff]`` sweeps the
+supported (config × codec × overlap × microbatch) grid, writes
+``ANALYSIS_report.json`` + the ``ANALYSIS_roofline.json`` table, and with
+``--diff`` fails on any drift against the committed report instead of
+rewriting it.
 """
 from __future__ import annotations
 
@@ -28,11 +35,24 @@ _LAZY = {
     "AuditReport": "repro.analysis.wire_audit",
     "WireAuditError": "repro.analysis.wire_audit",
     "RULES": "repro.analysis.wire_audit",
+    "SCALAR_REDUCE_ALLOWANCE": "repro.analysis.wire_audit",
     "Interval": "repro.analysis.intervals",
     "wire_chain_proof": "repro.analysis.intervals",
     "eval_jaxpr_intervals": "repro.analysis.intervals",
     "iter_eqns": "repro.analysis.jaxpr_walk",
     "COLLECTIVES": "repro.analysis.jaxpr_walk",
+    "build_graph": "repro.analysis.jaxpr_walk",
+    "backward_eqns": "repro.analysis.jaxpr_walk",
+    "forward_eqns": "repro.analysis.jaxpr_walk",
+    "analyze_schedule": "repro.analysis.schedule",
+    "full_audit": "repro.analysis.schedule",
+    "verify_step": "repro.analysis.schedule",
+    "ScheduleReport": "repro.analysis.schedule",
+    "FullReport": "repro.analysis.schedule",
+    "account_traffic": "repro.analysis.traffic",
+    "plan_transport": "repro.analysis.traffic",
+    "TransportPlan": "repro.analysis.traffic",
+    "TrafficReport": "repro.analysis.traffic",
     "lint_paths": "repro.analysis.lint",
     "lint_source": "repro.analysis.lint",
     "LINT_RULES": "repro.analysis.lint",

@@ -1,12 +1,21 @@
-"""``python -m repro.analysis --matrix`` — sweep the floatless-wire audit
-over the supported (config × codec × overlap × microbatch) grid, run the
-contract linter, and write ``ANALYSIS_report.json``.
+"""``python -m repro.analysis --matrix`` — sweep the full static audit
+(W wire rules + P schedule rules + T traffic rules) over the supported
+(config × codec × overlap × microbatch) grid, run the contract linter over
+``src/`` + ``tests/`` + ``benchmarks/``, and write ``ANALYSIS_report.json``
+plus the static-roofline table ``ANALYSIS_roofline.json``.
 
 Every point builds the real train step (``build_train_step``) on a forced
-4-host-device mesh, traces it, and runs :func:`repro.analysis.wire_audit
-.audit_jaxpr` — trace only, nothing is compiled or executed. A few fused
-points ride along for W003 coverage. ``--check`` exits non-zero on any
-violation (the CI tier-1 wiring).
+4-host-device mesh, traces it, and runs :func:`repro.analysis.schedule
+.full_audit` — trace only, nothing is compiled or executed. Each point's
+entry carries ``schedule`` (overlap classification + roofline fractions)
+and ``traffic`` (declared-vs-observed wire bytes/counts) sections next to
+the W-layer fields. A few fused points ride along for W003/P003 coverage.
+
+``--check`` exits non-zero on any violation (the CI tier-1 wiring).
+``--diff`` compares the fresh sweep against the COMMITTED report instead of
+rewriting it: new/removed grid points, flipped verdicts, or changed
+violation sets fail the run — so a contract change must land with an
+explicit report regeneration, never as a silent artifact diff.
 """
 from __future__ import annotations
 
@@ -20,6 +29,10 @@ DEFAULT_CODECS = ("dense8", "packed8")
 DEFAULT_OVERLAPS = ("off", "ring")
 DEFAULT_MICROBATCHES = (1, 4)
 
+# (config, codec, overlap, microbatches, fused) — the identity of one grid
+# point; everything else in an entry is a verdict about it
+POINT_KEY = ("config", "codec", "overlap", "microbatches", "fused")
+
 
 def _parse_args(argv):
     p = argparse.ArgumentParser(prog="python -m repro.analysis")
@@ -27,16 +40,95 @@ def _parse_args(argv):
                    help="sweep the audit over the supported grid")
     p.add_argument("--check", action="store_true",
                    help="exit non-zero on any lint/audit violation")
+    p.add_argument("--diff", action="store_true",
+                   help="compare against the committed report instead of "
+                        "rewriting it; exit non-zero on any drift")
     p.add_argument("--configs", default=None,
                    help="comma-separated arch subset (default: all shipped)")
     p.add_argument("--codecs", default=",".join(DEFAULT_CODECS))
     p.add_argument("--overlaps", default=",".join(DEFAULT_OVERLAPS))
     p.add_argument("--microbatches", default=",".join(map(str, DEFAULT_MICROBATCHES)))
     p.add_argument("--no-fused-points", action="store_true",
-                   help="skip the extra fused-route (W003) coverage points")
+                   help="skip the extra fused-route (W003/P003) coverage points")
     p.add_argument("--report", default="ANALYSIS_report.json")
+    p.add_argument("--roofline", default="ANALYSIS_roofline.json",
+                   help="where to write the static-roofline table artifact")
     p.add_argument("--devices", type=int, default=4)
     return p.parse_args(argv)
+
+
+def _point_key(entry) -> tuple:
+    return tuple(entry[k] for k in POINT_KEY)
+
+
+def _fmt_key(key: tuple) -> str:
+    return " × ".join(f"{k}={v}" for k, v in zip(POINT_KEY, key))
+
+
+def _verdict(entry) -> dict:
+    """The drift-relevant slice of a point entry: the verdict and the rule
+    ids behind it — never timing, never message text (both churn freely)."""
+    return {
+        "ok": bool(entry.get("ok")),
+        "rules": sorted({v["rule"] for v in entry.get("violations", [])}),
+        "error": "error" in entry,
+    }
+
+
+def _diff_reports(old: dict, new: dict) -> list:
+    """Human-readable drift lines between two matrix reports ([] = none).
+
+    Compares the grid point SET and each point's verdict (`ok` + violation
+    rule ids + build-error-ness); ignores timings, roofline numbers and
+    violation message wording so a jax version bump doesn't trip it."""
+    drift = []
+    old_pts = {_point_key(e): e for e in old.get("points", [])}
+    new_pts = {_point_key(e): e for e in new.get("points", [])}
+    for key in sorted(old_pts.keys() - new_pts.keys()):
+        drift.append(f"point removed: {_fmt_key(key)}")
+    for key in sorted(new_pts.keys() - old_pts.keys()):
+        drift.append(f"point added: {_fmt_key(key)}")
+    for key in sorted(old_pts.keys() & new_pts.keys()):
+        was, now = _verdict(old_pts[key]), _verdict(new_pts[key])
+        if was != now:
+            drift.append(
+                f"verdict changed: {_fmt_key(key)}: "
+                f"ok {was['ok']}->{now['ok']}, "
+                f"rules {was['rules']}->{now['rules']}"
+                + (", build error appeared" if now["error"] and not was["error"]
+                   else ", build error gone" if was["error"] and not now["error"]
+                   else "")
+            )
+    if bool(old.get("lint")) != bool(new.get("lint")):
+        drift.append(
+            f"lint drift: {len(old.get('lint', []))} committed violation(s) "
+            f"vs {len(new.get('lint', []))} fresh"
+        )
+    return drift
+
+
+def _roofline_rows(results) -> list:
+    """Flatten each point's schedule/traffic sections into one table row —
+    the artifact CI uploads and bench_overlap cross-checks statically."""
+    rows = []
+    for e in results:
+        sched = e.get("schedule") or {}
+        traffic = e.get("traffic") or {}
+        declared = traffic.get("declared") or {}
+        rows.append({
+            **{k: e[k] for k in POINT_KEY},
+            "ok": e["ok"],
+            "n_wire_collectives": sched.get("n_wire_collectives"),
+            "n_serialized": sched.get("n_serialized"),
+            "total_wire_bytes": sched.get("total_wire_bytes"),
+            "hidden_fraction": sched.get("hidden_fraction"),
+            "interleavable_fraction": sched.get("interleavable_fraction"),
+            "backward_flops": sched.get("backward_flops"),
+            "declared_bytes": declared.get("coll_bytes"),
+            "declared_eqns": declared.get("n_eqns"),
+            "payload_bytes_per_image": declared.get("payload_bytes"),
+        })
+    return rows
 
 
 def main(argv=None) -> int:
@@ -56,7 +148,7 @@ def main(argv=None) -> int:
     import jax
 
     from repro.analysis import lint as lint_mod
-    from repro.analysis import wire_audit
+    from repro.analysis import schedule as schedule_mod
     from repro.configs import ARCHS, ShapeConfig, get_arch, smoke_config
     from repro.configs.base import _load as _load_archs
     from repro.core import make_compressor
@@ -66,7 +158,15 @@ def main(argv=None) -> int:
     from repro.optim.schedules import constant
 
     src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    lint_violations = lint_mod.lint_paths([src_root])
+    repo_root = os.path.dirname(os.path.dirname(src_root))
+    # lint the harness trees too: a test that grows a raw lax.psum without a
+    # justified allow is the same contract hole as one in src/
+    lint_roots = [src_root] + [
+        d for d in (os.path.join(repo_root, "tests"),
+                    os.path.join(repo_root, "benchmarks"))
+        if os.path.isdir(d)
+    ]
+    lint_violations = lint_mod.lint_paths(lint_roots)
     for v in lint_violations:
         print(f"LINT {v}")
 
@@ -95,7 +195,7 @@ def main(argv=None) -> int:
         for m in micro
     ]
     if not args.no_fused_points and configs:
-        # fused route only supports M=1; packed point exercises W003,
+        # fused route only supports M=1; packed point exercises W003/P003,
         # dense point pins the fused dense image as in-contract
         points += [
             (configs[0], "packed8", "off", 1, True),
@@ -124,7 +224,7 @@ def main(argv=None) -> int:
                 overlap=ov,
                 microbatches=m,
             )
-            report = wire_audit.audit_step(art)
+            report = schedule_mod.verify_step(art)
             entry = {
                 "config": arch, "codec": codec, "overlap": ov,
                 "microbatches": m, "fused": fused,
@@ -140,7 +240,15 @@ def main(argv=None) -> int:
         entry["seconds"] = round(time.time() - t0, 2)
         results.append(entry)
         status = "OK" if entry["ok"] else "FAIL"
-        print(f"audit {label}: {status} ({entry['seconds']}s)")
+        sched = entry.get("schedule") or {}
+        extra = ""
+        if sched:
+            extra = (
+                f" [coll={sched['n_wire_collectives']}"
+                f" hidden={sched['hidden_fraction']:.2f}"
+                f" inter={sched['interleavable_fraction']:.2f}]"
+            )
+        print(f"audit {label}: {status}{extra} ({entry['seconds']}s)")
         if not entry["ok"]:
             for v in entry.get("violations", []):
                 print(f"    [{v['rule']}] {v['where']}: {v['message']}")
@@ -159,15 +267,44 @@ def main(argv=None) -> int:
         "ok": ok,
         "seconds": round(time.time() - t_all, 2),
     }
-    with open(args.report, "w") as f:
-        json.dump(artifact, f, indent=2, sort_keys=True)
+
+    # roofline table: always written (CI uploads it as a job artifact)
+    roofline = {
+        "grid": artifact["grid"],
+        "rows": _roofline_rows(results),
+        "ok": ok,
+    }
+    with open(args.roofline, "w") as f:
+        json.dump(roofline, f, indent=2, sort_keys=True)
+
+    drift = []
+    if args.diff:
+        if not os.path.exists(args.report):
+            drift = [f"no committed report at {args.report} to diff against"]
+        else:
+            with open(args.report) as f:
+                committed = json.load(f)
+            drift = _diff_reports(committed, artifact)
+        for line in drift:
+            print(f"DIFF {line}")
+        print(
+            f"diff vs {args.report}: {len(drift)} drift line(s) "
+            f"(report NOT rewritten; regenerate without --diff to accept)"
+        )
+    else:
+        with open(args.report, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+
     n_bad = sum(not r["ok"] for r in results)
     print(
         f"matrix: {len(results)} points, {n_bad} failing, "
-        f"{len(lint_violations)} lint violation(s) -> {args.report} "
+        f"{len(lint_violations)} lint violation(s) -> "
+        f"{args.report if not args.diff else args.roofline} "
         f"({artifact['seconds']}s)"
     )
     if args.check and not ok:
+        return 1
+    if args.diff and drift:
         return 1
     return 0
 

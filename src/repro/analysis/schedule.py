@@ -1,0 +1,434 @@
+"""Static overlap-schedule analyzer: prove the wire is hideable on the jaxpr.
+
+The PR 3 overlap design hides the integer all-reduce behind backward compute
+(bucketed ppermute rings, microbatch pipelining); until PR 9 the only
+evidence was bench_overlap counting collectives at runtime on one debug
+mesh. This module proves the schedule STRUCTURALLY, per traced step: build
+the cross-scope dataflow graph (:func:`repro.analysis.jaxpr_walk
+.build_graph`), and for every wire collective c compute
+
+  * ancestors(c)   — eqns whose values flow INTO c (its issue frontier);
+  * descendants(c) — eqns consuming c's result (its completion frontier);
+
+everything in neither set is UNORDERED with c: XLA's latency-hiding
+scheduler is free to run it while c's hops are in flight. A collective is
+**overlap-eligible** when unordered work exists — dot_general FLOPs
+(``concurrent_flops`` > 0: the reduce can hide behind compute, e.g. another
+microbatch's backward) or other wire transport (``concurrent_wire_bytes`` >
+0: bucket k interleaves with bucket j) — and **serialized** otherwise (the
+monolithic serial psum: every dot feeds it, nothing consumes until decode).
+
+The static roofline aggregates this per step: of all wire bytes, which
+fraction rides collectives with concurrent backward FLOPs
+(``hidden_fraction``) or with ANY unordered work (``interleavable_fraction``),
+plus total backward FLOPs and per-collective FLOPs/bytes — the numbers
+ROADMAP item 3's roofline needs, derived without executing.
+
+P-rules (schedule violations; W = wire_audit, T = traffic, C = lint):
+
+  P001  pipelining structurally broken — a wire collective's RESULT feeds
+        compute (a dot_general) that another wire collective depends on: the
+        later image's backward cannot start until the earlier reduce lands,
+        which serializes the exact overlap the microbatch pipeline promises
+        (clean pipelines decode only after the last image's reduce is
+        issued).
+  P002  wasted wire work — a dead wire collective (result unreachable from
+        the step outputs), a duplicate (identical operands/axes: same sum
+        computed twice), or a redundant cast round-trip (dtype A -> B -> A)
+        on the wire path.
+  P003  fused-route HBM byte budget — generalizes W003's "image-sized int
+        operand" to a per-eqn bytes model for BOTH codecs: each fused
+        pallas_call may consume at most the codec's wire payload for its
+        image (packed: 4·⌈d/k⌉ B; dense: d·lane B); an integer operand above
+        that budget is an HBM round-trip the one-pass contract forbids.
+
+:func:`full_audit` composes the W/P/T layers over ONE trace;
+``build_train_step(verify="static")`` and the ``--matrix`` CLI run exactly
+that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import jaxpr_walk as jw
+from repro.analysis import traffic as tr
+from repro.analysis import wire_audit as wa
+from repro.analysis.wire_audit import Violation, WireSpec
+
+__all__ = [
+    "RULES",
+    "ScheduleReport",
+    "FullReport",
+    "analyze_schedule",
+    "full_audit",
+    "verify_step",
+]
+
+RULES = {
+    "P001": "no wire collective's result feeds compute another wire "
+            "collective depends on (microbatch pipelining stays structural)",
+    "P002": "no dead/duplicate wire collectives, no redundant cast "
+            "round-trips on the wire path",
+    "P003": "fused pallas_call integer operands stay within the codec's "
+            "per-image wire-payload byte budget (one HBM pass)",
+}
+
+
+def _dot_flops(eqn) -> float:
+    """FLOPs of one dot_general: 2·batch·M·N·K (the jaxpr_cost convention,
+    duplicated here because src/ must not import a benchmarks module)."""
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        s for i, s in enumerate(lhs.shape) if i not in set(lc) | set(lb)
+    )
+    n = math.prod(
+        s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb)
+    )
+    return 2.0 * batch * m * n * contract
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    """Per-collective overlap classification + the static roofline."""
+
+    collectives: List[dict]          # one row per wire collective
+    n_wire_collectives: int
+    n_serialized: int
+    total_wire_bytes: int
+    hideable_bytes: int              # on collectives with concurrent FLOPs
+    interleavable_bytes: int         # on collectives with ANY unordered work
+    backward_flops: float            # all dot_general FLOPs, scan-scaled
+    violations: Tuple[Violation, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def hidden_fraction(self) -> float:
+        return self.hideable_bytes / self.total_wire_bytes if self.total_wire_bytes else 0.0
+
+    @property
+    def interleavable_fraction(self) -> float:
+        return (
+            self.interleavable_bytes / self.total_wire_bytes
+            if self.total_wire_bytes else 0.0
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "collectives": list(self.collectives),
+            "n_wire_collectives": self.n_wire_collectives,
+            "n_serialized": self.n_serialized,
+            "total_wire_bytes": self.total_wire_bytes,
+            "hideable_bytes": self.hideable_bytes,
+            "interleavable_bytes": self.interleavable_bytes,
+            "hidden_fraction": round(self.hidden_fraction, 6),
+            "interleavable_fraction": round(self.interleavable_fraction, 6),
+            "backward_flops": self.backward_flops,
+            "violations": [v.to_dict() for v in self.violations],
+            "ok": self.ok,
+        }
+
+
+def _where(eqn, idx: int) -> str:
+    a = eqn.invars[0].aval if eqn.invars else eqn.outvars[0].aval
+    axes = ",".join(jw.eqn_axes(eqn))
+    return f"{eqn.primitive.name}#{idx}@{axes} {a.dtype}{tuple(a.shape)}"
+
+
+def analyze_schedule(closed_jaxpr, spec: WireSpec) -> ScheduleReport:
+    """Classify every wire collective of a traced step as overlap-eligible
+    or serialized, check P001/P002/P003, and derive the static roofline."""
+    top = closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr") else closed_jaxpr
+    # per-call-site precision matters here: the default "link" mode merges
+    # every call site of a jax-cached utility body into one hub, ordering
+    # all microbatches against all collectives and killing the concurrency
+    # this analyzer exists to prove
+    graph = jw.build_graph(closed_jaxpr, shared_bodies="opaque")
+
+    # dot_general FLOPs with scan multiplicity (id -> flops)
+    dot_flops: Dict[int, float] = {}
+    total_flops = 0.0
+    for eqn, scale in jw.iter_eqns_scaled(top):
+        if eqn.primitive.name == "dot_general":
+            f = _dot_flops(eqn) * scale
+            dot_flops[id(eqn)] = dot_flops.get(id(eqn), 0.0) + f
+            total_flops += f
+
+    wire = tr.wire_collective_eqns(top, spec.dp_axes)
+    anc: List[set] = []
+    desc: List[set] = []
+    for eqn, _scale in wire:
+        anc.append(jw.backward_eqns(eqn.invars, graph))
+        desc.append(jw.forward_eqns(eqn.outvars, graph))
+    anc_union: set = set().union(*anc) if anc else set()
+
+    violations: List[Violation] = []
+    rows: List[dict] = []
+    n_serialized = 0
+    total_bytes = hideable = interleavable = 0
+    wire_bytes = [tr._int_operand_bytes(e) * s for e, s in wire]
+
+    for i, (eqn, _scale) in enumerate(wire):
+        unordered = lambda j: (  # noqa: E731 — tiny local predicate
+            id(wire[j][0]) not in anc[i] and id(wire[j][0]) not in desc[i]
+        )
+        conc_flops = sum(
+            f for eid, f in dot_flops.items()
+            if eid not in anc[i] and eid not in desc[i]
+        )
+        conc_wire = sum(
+            wire_bytes[j] for j in range(len(wire)) if j != i and unordered(j)
+        )
+        eligible = conc_flops > 0 or conc_wire > 0
+        b = wire_bytes[i]
+        total_bytes += b
+        if conc_flops > 0:
+            hideable += b
+        if eligible:
+            interleavable += b
+        else:
+            n_serialized += 1
+        rows.append({
+            "where": _where(eqn, i),
+            "bytes": b,
+            "concurrent_flops": conc_flops,
+            "concurrent_wire_bytes": conc_wire,
+            "eligible": eligible,
+        })
+        # P001: result feeds compute an(other) wire collective waits on
+        broken = [
+            eid for eid in desc[i]
+            if eid in dot_flops and eid in anc_union and eid not in anc[i]
+        ]
+        if broken:
+            violations.append(Violation(
+                "P001", _where(eqn, i),
+                f"collective result feeds {len(broken)} dot_general eqn(s) "
+                f"that another wire collective depends on — the later "
+                f"image's backward stalls on this reduce; pipelining is "
+                f"structurally broken (decode must happen after the last "
+                f"image's reduce is issued)",
+            ))
+
+    # ---- P002: dead / duplicate collectives, cast round-trips -----------
+    live = jw.backward_eqns(top.outvars, graph)
+    seen: Dict[tuple, int] = {}
+    for i, (eqn, _scale) in enumerate(wire):
+        if id(eqn) not in live:
+            violations.append(Violation(
+                "P002", _where(eqn, i),
+                "dead wire collective: its result never reaches the step "
+                "outputs — wire bytes spent on nothing",
+            ))
+        key = (
+            eqn.primitive.name,
+            jw.eqn_axes(eqn),
+            tuple(id(v) for v in eqn.invars if jw.is_var(v)),
+            str(eqn.params.get("perm")),
+        )
+        if key in seen:
+            violations.append(Violation(
+                "P002", _where(eqn, i),
+                f"duplicate wire collective: identical operands and axes as "
+                f"collective #{seen[key]} — the same sum crosses the wire "
+                f"twice",
+            ))
+        else:
+            seen[key] = i
+
+    # cast round-trips on the wire path (upstream of reducing dp operands)
+    wire_roots = []
+    for eqn, _scale in wire:
+        if eqn.primitive.name in jw.REDUCING_COLLECTIVES:
+            wire_roots.extend(
+                v for v in eqn.invars
+                if jw.is_var(v)
+                and getattr(v.aval, "dtype", None) is not None
+                and v.aval.dtype.kind in ("i", "u")
+            )
+    if wire_roots:
+        upstream = wa.backward_wire_eqns(wire_roots, graph)
+        for eqn, _scale in jw.iter_eqns_scaled(top):
+            if (eqn.primitive.name != "convert_element_type"
+                    or id(eqn) not in upstream):
+                continue
+            src = eqn.invars[0]
+            if not jw.is_var(src):
+                continue
+            e1 = graph.defs.get(id(src))
+            if (e1 is None or id(e1) not in upstream
+                    or e1.primitive.name != "convert_element_type"):
+                continue
+            d0 = e1.invars[0].aval.dtype
+            d1 = src.aval.dtype
+            d2 = eqn.outvars[0].aval.dtype
+            # integer round-trips only: the transport is integer, and float
+            # cast chains upstream (f32 -> bf16 compute -> f32 grads) are
+            # the mixed-precision recipe, not wasted wire work
+            if (d0 == d2 and d1 != d0
+                    and all(d.kind in ("i", "u") for d in (d0, d1, d2))):
+                violations.append(Violation(
+                    "P002",
+                    f"convert_element_type {d0}->{d1}->{d2}",
+                    "redundant cast round-trip on the wire path: the value "
+                    "returns to its original dtype (dead weight if "
+                    "lossless, a truncation bug if not)",
+                ))
+
+    # ---- P003: fused-route per-eqn HBM byte budget -----------------------
+    if spec.fused:
+        for eqn, _scale in jw.iter_eqns_scaled(top):
+            if eqn.primitive.name != "pallas_call":
+                continue
+            image = max(
+                (jw.aval_nelem(v.aval)
+                 for v in list(eqn.invars) + list(eqn.outvars)
+                 if getattr(v.aval, "dtype", None) is not None
+                 and v.aval.dtype.kind == "f"),
+                default=0,
+            )
+            if not image:
+                continue
+            budget = tr.payload_bytes(spec.wire_kind, spec.bits, image)
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                if (aval is None or getattr(aval, "dtype", None) is None
+                        or aval.dtype.kind not in ("i", "u")):
+                    continue
+                if jw.aval_nelem(aval) <= spec.scalar_allowance:
+                    continue  # step counters / scalar state
+                b = jw.aval_size_bytes(aval)
+                if b > budget:
+                    violations.append(Violation(
+                        "P003",
+                        f"pallas_call {aval.dtype}{tuple(aval.shape)}",
+                        f"integer kernel operand of {b} B exceeds the "
+                        f"{spec.wire_kind}{spec.bits} wire-payload budget "
+                        f"{budget} B for its {image}-element image — an "
+                        f"HBM round-trip the one-pass fused route forbids",
+                    ))
+
+    return ScheduleReport(
+        collectives=rows,
+        n_wire_collectives=sum(s for _e, s in wire),
+        n_serialized=n_serialized,
+        total_wire_bytes=total_bytes,
+        hideable_bytes=hideable,
+        interleavable_bytes=interleavable,
+        backward_flops=total_flops,
+        violations=tuple(violations),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the composed W + P + T audit
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FullReport:
+    """One trace, all three static layers: wire audit (W), schedule (P),
+    traffic (T). ``violations`` merges the kept violations of every layer;
+    suppression spans all of them (rule ids are disjoint by prefix)."""
+
+    audit: wa.AuditReport
+    schedule: ScheduleReport
+    traffic: tr.TrafficReport
+    suppressed: Tuple[Tuple[Violation, str], ...]
+
+    @property
+    def violations(self) -> Tuple[Violation, ...]:
+        return (
+            self.audit.violations
+            + self.schedule.violations
+            + self.traffic.violations
+        )
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def raise_if_failed(self):
+        if not self.ok:
+            lines = "\n".join(f"  {v}" for v in self.violations)
+            raise wa.WireAuditError(
+                f"static audit failed "
+                f"({len(self.violations)} violation(s)):\n{lines}"
+            )
+
+    def to_dict(self) -> dict:
+        d = self.audit.to_dict()
+        d["violations"] = [v.to_dict() for v in self.violations]
+        d["suppressed"] = [
+            {**v.to_dict(), "justification": j}
+            for v, j in self.audit.suppressed + self.suppressed
+        ]
+        d["schedule"] = self.schedule.to_dict()
+        d["traffic"] = self.traffic.to_dict()
+        d["ok"] = self.ok
+        return d
+
+
+def full_audit(
+    closed_jaxpr,
+    spec: WireSpec,
+    *,
+    suppress: Optional[Dict[str, str]] = None,
+) -> FullReport:
+    """Run the W (wire), P (schedule) and T (traffic) rule families over one
+    traced step. ``suppress`` may waive any rule id, W/P/T alike."""
+    suppress = dict(suppress or {})
+    known = {**wa.RULES, **RULES, **tr.RULES}
+    for rule, why in suppress.items():
+        if rule not in known:
+            raise ValueError(f"unknown rule {rule!r} in suppress")
+        if not str(why).strip():
+            raise ValueError(
+                f"suppressing {rule} requires a non-empty justification"
+            )
+    w_suppress = {r: j for r, j in suppress.items() if r in wa.RULES}
+    audit = wa.audit_jaxpr(closed_jaxpr, spec, suppress=w_suppress)
+    schedule = analyze_schedule(closed_jaxpr, spec)
+    traffic = tr.account_traffic(closed_jaxpr, spec)
+
+    suppressed: List[Tuple[Violation, str]] = []
+
+    def keep(report):
+        kept = []
+        for v in report.violations:
+            if v.rule in suppress:
+                suppressed.append((v, suppress[v.rule]))
+            else:
+                kept.append(v)
+        report.violations = tuple(kept)
+
+    keep(schedule)
+    keep(traffic)
+    return FullReport(
+        audit=audit,
+        schedule=schedule,
+        traffic=traffic,
+        suppressed=tuple(suppressed),
+    )
+
+
+def verify_step(artifacts, which: str = "compressed", **kw) -> FullReport:
+    """Trace one jitted variant of a built step and run the full W/P/T
+    static audit against its attached spec — what
+    ``build_train_step(verify="static")`` executes."""
+    import jax  # deferred: the lint half of repro.analysis is jax-free
+
+    spec = getattr(artifacts, "audit_spec", None)
+    if spec is None:
+        raise ValueError(
+            "StepArtifacts carries no audit_spec — build the step with "
+            "repro.launch.step.build_train_step (PR 8+) or pass full_audit "
+            "an explicit WireSpec"
+        )
+    jaxpr = jax.make_jaxpr(artifacts.jitted[which])(*artifacts.arg_structs)
+    return full_audit(jaxpr, spec, **kw)

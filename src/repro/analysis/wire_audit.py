@@ -40,6 +40,7 @@ from repro.analysis.intervals import Interval, TOP
 
 __all__ = [
     "RULES",
+    "SCALAR_REDUCE_ALLOWANCE",
     "WireSpec",
     "Violation",
     "AuditReport",
@@ -60,6 +61,15 @@ RULES = {
 
 _LANE_MAX = {"int8": 127, "int16": 32767}
 
+# W001's escape hatch for float reductions that are METRICS, not gradient
+# payload: the loss mean, grad-norm/clip scalars, the stacked per-leaf
+# ||·||² vector of _global_reduce_leaf_sq. 64 elements ≈ the largest leaf
+# COUNT a shipped config stacks into one such vector, and is 4+ orders of
+# magnitude below the smallest gradient leaf — so a float gradient can never
+# hide under the allowance, while per-leaf diagnostics always fit. The
+# 64/65 boundary is pinned by tests/test_analysis.py.
+SCALAR_REDUCE_ALLOWANCE = 64
+
 
 class WireAuditError(AssertionError):
     """Raised by ``AuditReport.raise_if_failed`` / ``verify='static'``."""
@@ -79,12 +89,25 @@ class WireSpec:
     bits: int = 32
     use_kernels: bool = False
     fused: bool = False
-    scalar_allowance: int = 64
+    scalar_allowance: int = SCALAR_REDUCE_ALLOWANCE
+    # transport declaration (PR 9) — what the traffic accountant and the
+    # schedule analyzer prove the trace against. ``leaf_sizes`` is the
+    # element count of each LOCAL param leaf (the integer image the codec
+    # packs), in flatten order; ``overlap``/``bucket_words`` mirror the
+    # CommCtx the step was built with. Empty leaf_sizes = unknown payload
+    # (hand-built specs): the byte/count equality rules are skipped.
+    leaf_sizes: Tuple[int, ...] = ()
+    overlap: str = "off"
+    bucket_words: int = 0
 
     @property
     def lim(self) -> int:
         """Declared §5.1 clip limit for the n·M accumulated sum."""
         return iv.safe_clip_limit(self.n_workers * self.n_accum, self.bits)
+
+    @property
+    def dp_sizes(self) -> Tuple[int, ...]:
+        return tuple(self.axis_sizes.get(a, 1) for a in self.dp_axes)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -100,8 +123,20 @@ def _unwrap_wire(wf):
 
 
 def spec_for_step(layout, wf, *, n_accum: int = 1, fused: bool = False) -> WireSpec:
-    """Build the audit spec from a resolved launch layout + wire format."""
+    """Build the audit spec from a resolved launch layout + wire format.
+
+    Besides the codec facts, the spec declares the step's TRANSPORT: per-leaf
+    integer-image sizes (from the layout's local param structs) and the
+    overlap/bucketing mode from its CommCtx — everything the static byte
+    accountant (:mod:`repro.analysis.traffic`) needs to reconstruct, without
+    executing, exactly what the ``Logged`` codec would meter at trace time."""
+    import math
+
     wf = _unwrap_wire(wf)
+    leaf_sizes = tuple(
+        int(math.prod(l.shape)) for l in _tree_leaves(layout.l_shapes)
+    )
+    ctx = getattr(layout, "ctx", None)
     return WireSpec(
         dp_axes=tuple(layout.dp),
         axis_sizes=dict(layout.mesh.shape),
@@ -111,7 +146,16 @@ def spec_for_step(layout, wf, *, n_accum: int = 1, fused: bool = False) -> WireS
         bits=int(wf.bits),
         use_kernels=bool(getattr(wf, "use_kernels", False)),
         fused=fused,
+        leaf_sizes=leaf_sizes,
+        overlap=getattr(ctx, "overlap", "off"),
+        bucket_words=int(getattr(ctx, "bucket_words", 0)),
     )
+
+
+def _tree_leaves(tree):
+    import jax  # deferred: the lint half of repro.analysis is jax-free
+
+    return jax.tree.leaves(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,104 +210,21 @@ class AuditReport:
 
 
 # --------------------------------------------------------------------------
-# cross-scope dataflow graph (backward reachability for observed-clip rule)
+# cross-scope dataflow graph — the generic defs/uses/links construction and
+# plain backward reachability live in jaxpr_walk (promoted there in PR 9 so
+# the schedule analyzer shares them); this module keeps only the WIRE-path
+# restricted walk below.
 # --------------------------------------------------------------------------
-def _is_var(a) -> bool:
-    return not hasattr(a, "val")
-
-
-def _build_graph(closed_jaxpr):
-    """defs: id(var) -> defining eqn; links: id(var) -> [vars equal across a
-    scope boundary] (call in/outvars, scan consts/carries/xs/ys, cond
-    branches, while carries). Reachability follows defs + links only —
-    equality edges, never consumer edges."""
-    defs: Dict[int, object] = {}
-    links: Dict[int, List[object]] = {}
-
-    def link(a, b):
-        if _is_var(a) and _is_var(b):
-            links.setdefault(id(a), []).append(b)
-            links.setdefault(id(b), []).append(a)
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            for ov in eqn.outvars:
-                defs[id(ov)] = eqn
-            name = eqn.primitive.name
-            p = eqn.params
-            if name == "scan":
-                body = p["jaxpr"].jaxpr if hasattr(p["jaxpr"], "jaxpr") else p["jaxpr"]
-                nc, nk = p["num_consts"], p["num_carry"]
-                for i in range(nc):
-                    link(body.invars[i], eqn.invars[i])
-                for j in range(nk):
-                    link(body.invars[nc + j], eqn.invars[nc + j])  # init
-                    link(body.invars[nc + j], body.outvars[j])  # loop
-                    link(eqn.outvars[j], body.outvars[j])
-                for k in range(nc + nk, len(body.invars)):
-                    link(body.invars[k], eqn.invars[k])
-                for j in range(nk, len(body.outvars)):
-                    link(eqn.outvars[j], body.outvars[j])
-            elif name == "while":
-                body = p["body_jaxpr"].jaxpr
-                cn, bn = p["cond_nconsts"], p["body_nconsts"]
-                carry = eqn.invars[cn + bn:]
-                for i in range(bn):
-                    link(body.invars[i], eqn.invars[cn + i])
-                for j, c in enumerate(carry):
-                    link(body.invars[bn + j], c)
-                    link(body.invars[bn + j], body.outvars[j])
-                    link(eqn.outvars[j], body.outvars[j])
-            elif name == "cond":
-                for br in p["branches"]:
-                    sub = br.jaxpr if hasattr(br, "jaxpr") else br
-                    for bi, xi in zip(sub.invars, eqn.invars[1:]):
-                        link(bi, xi)
-                    for bo, xo in zip(sub.outvars, eqn.outvars):
-                        link(xo, bo)
-            else:
-                for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
-                    if k in p:
-                        sub = p[k].jaxpr if hasattr(p[k], "jaxpr") else p[k]
-                        if (len(sub.invars) == len(eqn.invars)
-                                and len(sub.outvars) == len(eqn.outvars)):
-                            for bi, xi in zip(sub.invars, eqn.invars):
-                                link(bi, xi)
-                            for bo, xo in zip(sub.outvars, eqn.outvars):
-                                link(xo, bo)
-                        break
-            for sub in jw.eqn_subjaxprs(eqn):
-                walk(sub)
-
-    top = closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr") else closed_jaxpr
-    walk(top)
-    return defs, links
-
-
-def _backward_eqns(roots, defs, links) -> set:
-    """ids of every eqn whose output can flow into any root var."""
-    seen_vars: set = set()
-    hit: set = set()
-    stack = [r for r in roots if _is_var(r)]
-    while stack:
-        v = stack.pop()
-        if id(v) in seen_vars:
-            continue
-        seen_vars.add(id(v))
-        eqn = defs.get(id(v))
-        if eqn is not None and id(eqn) not in hit:
-            hit.add(id(eqn))
-            stack.extend(a for a in eqn.invars if _is_var(a))
-        stack.extend(links.get(id(v), ()))
-    return hit
-
+_is_var = jw.is_var
 
 # Primitives a value may pass through between its §5.1 clip and the dp
 # collective: rounding, scaling, lane casts, bit-packing, bucketing and the
 # ring transport. The clip-attribution walk stops at anything else (matmuls,
 # gathers, reductions), so data-path clips deep in the model — token-id
-# clips, logit caps — are NOT mistaken for wire clips.
-_WIRE_PATH = frozenset({
+# clips, logit caps — are NOT mistaken for wire clips. schedule.py's P002
+# round-trip rule keys off the same set: a cast is "on the wire path" iff
+# this walk reaches it.
+WIRE_PATH_PRIMS = frozenset({
     "convert_element_type", "bitcast_convert_type", "reshape",
     "broadcast_in_dim", "squeeze", "transpose", "slice", "dynamic_slice",
     "dynamic_update_slice", "concatenate", "pad", "add", "sub", "mul",
@@ -274,10 +235,11 @@ _WIRE_PATH = frozenset({
 })
 
 
-def _backward_wire_eqns(roots, defs, links) -> set:
-    """Like :func:`_backward_eqns` but only walks THROUGH wire-path
-    primitives; call/scan scopes are crossed via equality links (never by
-    jumping a call eqn's invars, which would tunnel past its body)."""
+def backward_wire_eqns(roots, graph: jw.DataflowGraph) -> set:
+    """Like :func:`jaxpr_walk.backward_eqns` but only walks THROUGH
+    wire-path primitives; call/scan scopes are crossed via equality links
+    (never by jumping a call eqn's invars, which would tunnel past its
+    body)."""
     seen_vars: set = set()
     hit: set = set()
     stack = [r for r in roots if _is_var(r)]
@@ -286,13 +248,13 @@ def _backward_wire_eqns(roots, defs, links) -> set:
         if id(v) in seen_vars:
             continue
         seen_vars.add(id(v))
-        eqn = defs.get(id(v))
+        eqn = graph.defs.get(id(v))
         if eqn is not None and id(eqn) not in hit:
             hit.add(id(eqn))
             if (next(jw.eqn_subjaxprs(eqn), None) is None
-                    and eqn.primitive.name in _WIRE_PATH):
+                    and eqn.primitive.name in WIRE_PATH_PRIMS):
                 stack.extend(a for a in eqn.invars if _is_var(a))
-        stack.extend(links.get(id(v), ()))
+        stack.extend(graph.links.get(id(v), ()))
     return hit
 
 
@@ -453,8 +415,8 @@ def audit_jaxpr(
 
     # ---- observed-clip re-proof (forgot-n_accum bug class) -------------
     if wire_roots:
-        defs, links = _build_graph(closed_jaxpr)
-        upstream = _backward_wire_eqns(wire_roots, defs, links)
+        graph = jw.build_graph(closed_jaxpr)
+        upstream = backward_wire_eqns(wire_roots, graph)
         # The §5.1 clip runs in the float domain just before the cast to the
         # lane dtype (round → clip → astype), so a clamp counts as a WIRE
         # clip when its output is integer OR is consumed by an int

@@ -761,9 +761,9 @@ def build_train_step(
                 "verify='static' needs an integer wire to prove; "
                 f"compressor {type(compressor).__name__} has no wire_format"
             )
-        from repro.analysis.wire_audit import audit_step
+        from repro.analysis.schedule import verify_step
 
-        audit_step(artifacts).raise_if_failed()
+        verify_step(artifacts).raise_if_failed()
     return artifacts
 
 

@@ -70,6 +70,30 @@ class BucketManifest:
         identical to the serial route's (bucketing adds no padding)."""
         return self.total_words * jnp.dtype(self.dtype).itemsize
 
+    def ring_collectives(self, dp_sizes) -> Tuple[int, int]:
+        """``(n_eqns, operand_bytes)`` the bucketed ring route emits for ONE
+        image of this manifest over the given dp axis sizes: per bucket of
+        ``s`` words and per axis of size n > 1, ``ring_allreduce_int`` issues
+        (n-1) ppermute hops + 1 all_gather, each moving an ⌈s/n⌉-word chunk
+        (a size-1 axis short-circuits in Python and emits nothing).
+
+        This is the runtime side of the static transport model — the
+        analyzer's :func:`repro.analysis.traffic.plan_transport` computes the
+        same numbers from the :class:`~repro.analysis.wire_audit.WireSpec`
+        alone, and tests/test_schedule.py pins the two equal so
+        benchmarks/bench_overlap.py can cross-check its runtime collective
+        counts against the manifest without tracing anything."""
+        itemsize = jnp.dtype(self.dtype).itemsize
+        n_eqns = 0
+        words = 0
+        for s in self.bucket_sizes:
+            for n in dp_sizes:
+                if n <= 1:
+                    continue
+                n_eqns += n
+                words += n * (-(-s // n))
+        return n_eqns, words * itemsize
+
 
 def plan_buckets(words_tree, *, bucket_words: int = DEFAULT_BUCKET_WORDS) -> BucketManifest:
     """Derive the manifest from a (concrete or abstract) transport-word tree."""
