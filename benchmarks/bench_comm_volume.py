@@ -24,6 +24,10 @@ smoke the table (see .github/workflows/ci.yml):
         end to end vs the default transport; is 5x. Vs the int8 lane +
         ZeRO-1 route it is 2x-epsilon — the epsilon being 16 bytes of
         scalar metric psums — reported but not asserted.)
+    dp_int(topk8_64)     <= dp_int(packed8) / 4   (the sparse gather
+        payload: 64 idx+vals pairs per leaf vs a dense word per 4 coords —
+        convergence at matched final loss is bench_convergence's logreg
+        section)
 
 Runs itself in a subprocess with 4 forced host devices so the parent
 process' single-device view is untouched.
@@ -71,6 +75,7 @@ codecs = {
     "packed4": ("intsgd4", "packed4", False),
     "dense8_fused": ("intsgd8", None, True),
     "packed8_fused": ("intsgd8", "packed8", True),
+    "topk8_64": ("intsgd8", "topk8:64", False),
 }
 out = {"codecs": {}, "compressors": {}}
 for row, (name, wire, fused) in codecs.items():
@@ -100,6 +105,9 @@ def _ratios(codecs: dict) -> dict:
         ),
         "dense8_vs_f32_dp_int": div(
             codecs["f32"]["dp"], codecs["dense8"]["dp_int"]
+        ),
+        "topk8_64_vs_packed8_dp_int": div(
+            codecs["packed8"]["dp_int"], codecs["topk8_64"]["dp_int"]
         ),
     }
 
@@ -164,10 +172,15 @@ def main(emit=print, check: bool = False):
             )
             if ratios[k] < 2.0
         ]
+        # the sparse-wire headline (ROADMAP open item 1): the top-64 gather
+        # payload beats packed8's dense words by >= 4x on the dp wire
+        if ratios["topk8_64_vs_packed8_dp_int"] < 4.0:
+            failures.append("topk8_64_vs_packed8_dp_int")
         if failures:
             emit(f"comm_volume/CHECK_FAILED,0,{failures!r}")
             raise SystemExit(1)
-        emit("comm_volume/CHECK_OK,1,all codec ratios >= 2x")
+        emit("comm_volume/CHECK_OK,1,all codec ratios hold "
+             "(packed >= 2x, topk >= 4x)")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ import os
 import sys
 import time
 
-DEFAULT_CODECS = ("dense8", "packed8")
+DEFAULT_CODECS = ("dense8", "packed8", "topk8:64")
 DEFAULT_OVERLAPS = ("off", "ring")
 DEFAULT_MICROBATCHES = (1, 4)
 
@@ -177,6 +177,8 @@ def main(argv=None) -> int:
         else sorted(ARCHS)
     )
     codecs = [c.strip() for c in args.codecs.split(",") if c.strip()]
+    for c in codecs:
+        make_wire_format(c)  # typo fails NOW with the registry's option list
     overlaps = [o.strip() for o in args.overlaps.split(",") if o.strip()]
     micro = [int(m) for m in args.microbatches.split(",") if m.strip()]
 

@@ -41,6 +41,7 @@ __all__ = [
     "ChainProof",
     "int_range_max",
     "safe_clip_limit",
+    "declared_clip_limit",
 ]
 
 _INF = math.inf
@@ -58,6 +59,17 @@ def safe_clip_limit(n_contrib: int, bits: int) -> int:
     """§5.1 limit ``(2^(b-1)-1)//n`` WITHOUT the WireRangeError raise —
     the proof reports lim==0 as a violation instead of throwing."""
     return _INT_RANGE[bits] // max(int(n_contrib), 1)
+
+
+def declared_clip_limit(kind: str, n_contrib: int, bits: int) -> int:
+    """The clip limit a (kind, bits) codec declares for ``n_contrib``
+    summed contributions. Psum-transport kinds divide the value range by n
+    (§5.1: the sum happens ON the wire); the gather-transport "topk" kind
+    clips at the full range — nothing sums until the decode-side
+    scatter-add, whose int32 bound is the chain proof's job."""
+    if kind == "topk":
+        return _INT_RANGE[bits]
+    return safe_clip_limit(n_contrib, bits)
 
 
 # --------------------------------------------------------------------------
@@ -188,6 +200,28 @@ def _and_transfer(ins, eqn):
     return TOP
 
 
+def _scatter_add_transfer(ins, eqn):
+    # out = operand with U update elements added at (possibly colliding)
+    # indices: each output element receives between 0 and U updates, so
+    # out ⊆ operand + hull(0, U·updates). Coarse but sound — and exactly
+    # what bounds the gather wire's decode image (n·k top-k values
+    # scatter-added into zeros).
+    if len(ins) < 3 or not (ins[0].bounded and ins[2].bounded):
+        return TOP
+    U = _nelem(eqn.invars[2].aval)
+    lo = min(0, ins[2].lo * U)
+    hi = max(0, ins[2].hi * U)
+    return ins[0].add(Interval(lo, hi))
+
+
+def _top_k_transfer(ins, eqn):
+    # (values, indices): values are a subset of the input, indices address
+    # the input's trailing dim
+    shape = getattr(eqn.invars[0].aval, "shape", ())
+    d = int(shape[-1]) if shape else 1
+    return [ins[0], Interval(0, max(d - 1, 0))]
+
+
 _TRANSFER: Dict[str, Callable] = {
     "add": lambda ins, e: ins[0].add(ins[1]),
     "sub": lambda ins, e: ins[0].sub(ins[1]),
@@ -227,6 +261,8 @@ _TRANSFER: Dict[str, Callable] = {
     "reduce_or": lambda ins, e: Interval(0, 1),
     "iota": lambda ins, e: Interval(0, max(_nelem(e.outvars[0].aval) - 1, 0)),
     "rem": lambda ins, e: Interval(-ins[1].mag, ins[1].mag) if ins[1].bounded else TOP,
+    "scatter-add": _scatter_add_transfer,
+    "scatter": lambda ins, e: ins[0].union(ins[2]) if len(ins) >= 3 else TOP,
 }
 
 _CMP = ("eq", "ne", "lt", "le", "gt", "ge", "is_finite")
@@ -368,6 +404,8 @@ class _Eval:
                     outs = self._eval_cond(eqn, ins)
                 elif name == "optimization_barrier":
                     outs = list(ins)
+                elif name == "top_k":
+                    outs = _top_k_transfer(ins, eqn)
                 elif name in _CMP:
                     outs = [Interval(0, 1) for _ in eqn.outvars]
                 elif name in _TRANSFER:
@@ -455,11 +493,11 @@ def wire_chain_proof(
     clip against the same overflow conditions (the forgot-``n_accum`` bug
     class fails here even though the declared config is fine).
     """
-    if kind not in ("dense", "packed"):
+    if kind not in ("dense", "packed", "topk"):
         raise ValueError(f"unknown wire kind {kind!r}")
     n, M = int(n_workers), int(n_accum)
     R = int_range_max(bits)
-    lim_declared = safe_clip_limit(n * M, bits)
+    lim_declared = declared_clip_limit(kind, n * M, bits)
     L = lim_declared if lim is None else int(lim)
     bad: List[Tuple[str, str]] = []
     if L <= 0:
@@ -490,6 +528,27 @@ def wire_chain_proof(
                 f"n-worker lane sum |Σ| ≤ {int(wire_sum.mag)} exceeds the "
                 f"int{bits} lane range ±{lane_max} (clip |v| ≤ {L} is too "
                 f"loose for {n} workers × {M} microbatches)",
+            ))
+    elif kind == "topk":
+        # gather transport: every field crosses the wire UNSUMMED as a plain
+        # two's-complement `bits`-wide value next to its int32 index — no
+        # bias, no field-to-field addition, and no pipelined pre-pack
+        # accumulation either (topk is never fused: each of the M images is
+        # encoded fresh at ±L), so the field is the ENCODE stage and the
+        # only field condition is that the (possibly observed) clip fits
+        # the value width. Partial and full "wire sums" are the field
+        # itself: the sum happens after transport, in the scatter-add
+        # image checked below — which is where the n·M product bites.
+        field = encode
+        stages["packed_field"] = field
+        stages["wire_partial"] = field
+        stages["wire_sum"] = field
+        if field.mag > R:
+            bad.append((
+                "field-overflow",
+                f"topk value field |v| ≤ {int(field.mag)} exceeds the "
+                f"int{bits} two's-complement range ±{R} (clip |v| ≤ {L} "
+                f"is wider than the value plane)",
             ))
     else:
         # packed: pack() biases every field by clip_limit(n) (the bias the

@@ -15,7 +15,12 @@ exact eqn-level transport the step must emit —
     size n > 1: (n-1) ppermute hops + 1 all_gather, each carrying a
     ⌈s/n⌉-word chunk (``ring_allreduce_int`` pads s to n·⌈s/n⌉; the padding
     is reported, not hidden) — a size-1 axis short-circuits in Python and
-    emits nothing.
+    emits nothing;
+  * gather transport (``wire_transport="gather"``, TopKInt): per image the
+    bucketized payload (one bucket serial; ``bucket_words`` cuts under ring
+    overlap) rides one all_gather per dp axis of size > 1, operands
+    COMPOUNDING across axes (the second axis gathers the first's stacked
+    output) — exactly ``BucketManifest.gather_collectives``.
 
 — then walks the jaxpr and demands the observed wire collectives match:
 
@@ -83,27 +88,33 @@ WIRE_COLLECTIVE_PRIMS = frozenset(
 # declared-side arithmetic (jax-free: mirrors repro.wire without importing it)
 # ---------------------------------------------------------------------------
 def word_itemsize(kind: str, bits: int) -> int:
-    """Transport word size in bytes: PackedInt always rides int32 words;
+    """Transport word size in bytes: PackedInt and TopKInt always ride
+    int32 words (topk: int32 index plane + bit-packed value words);
     DenseInt rides the narrowest native lane holding one value (mirrors
     repro.wire.dense._LANE)."""
-    if kind == "packed":
+    if kind in ("packed", "topk"):
         return 4
     return 1 if bits <= 8 else (2 if bits <= 16 else 4)
 
 
-def leaf_wire_words(kind: str, bits: int, size: int) -> int:
+def leaf_wire_words(kind: str, bits: int, size: int, *, k: int = 0) -> int:
     """Transport words one leaf of ``size`` elements packs into (mirrors
-    PackedInt.words_len / DenseInt's identity layout)."""
+    PackedInt.words_len / DenseInt's identity layout / TopKInt's
+    idx-plane + bit-packed vals-plane split, all int32 words)."""
     if kind == "packed":
-        k = 32 // bits
-        return -(-int(size) // k)
+        f = 32 // bits
+        return -(-int(size) // f)
+    if kind == "topk":
+        k_eff = min(int(k), int(size)) if k else int(size)
+        f = 32 // bits
+        return k_eff + -(-k_eff // f)
     return int(size)
 
 
-def payload_bytes(kind: str, bits: int, size: int) -> int:
+def payload_bytes(kind: str, bits: int, size: int, *, k: int = 0) -> int:
     """Exact wire bytes for one leaf — equals ``WireFormat.wire_bytes(size)``
     and therefore what ``Logged`` meters per pack call."""
-    return leaf_wire_words(kind, bits, size) * word_itemsize(kind, bits)
+    return leaf_wire_words(kind, bits, size, k=k) * word_itemsize(kind, bits)
 
 
 def plan_bucket_sizes(total_words: int, bucket_words: int) -> Tuple[int, ...]:
@@ -142,10 +153,45 @@ def plan_transport(spec: WireSpec) -> Optional[TransportPlan]:
         return None
     kind, bits = spec.wire_kind, spec.bits
     itemsize = word_itemsize(kind, bits)
-    words = [leaf_wire_words(kind, bits, s) for s in spec.leaf_sizes]
+    words = [
+        leaf_wire_words(kind, bits, s, k=spec.topk_k) for s in spec.leaf_sizes
+    ]
     total_words = sum(words)
     payload = total_words * itemsize
     by_prim: Dict[str, int] = {}
+    if spec.wire_transport == "gather":
+        # Gather route (CommCtx._gather_wire): the payload is always
+        # bucketized — at bucket_words under ring overlap, as ONE bucket
+        # otherwise — and each bucket rides one all_gather per dp axis of
+        # size > 1 (size-1 axes short-circuit in allgather_wire_words and
+        # emit nothing). The gathers COMPOUND: the second axis gathers the
+        # first axis's already-stacked output, so its operand is n₁× the
+        # bucket — the same arithmetic as BucketManifest.gather_collectives,
+        # pinned equal by tests. No chunk padding: plan_buckets cuts a
+        # ragged tail and the gather ships it as-is.
+        if spec.overlap == "ring" and spec.bucket_words:
+            buckets = plan_bucket_sizes(total_words, spec.bucket_words)
+        else:
+            buckets = (total_words,) if total_words else ()
+        gather_axes = [n for n in spec.dp_sizes if n > 1]
+        coll_words = 0
+        eqns = 0
+        for s in buckets:
+            grown = s
+            for n in reversed(gather_axes):
+                coll_words += grown
+                eqns += 1
+                by_prim["all_gather"] = by_prim.get("all_gather", 0) + 1
+                grown *= n
+        return TransportPlan(
+            payload_bytes=payload,
+            total_words=total_words,
+            n_buckets=len(buckets),
+            n_eqns=eqns * spec.n_accum,
+            coll_bytes=coll_words * itemsize * spec.n_accum,
+            padding_bytes=0,
+            by_prim={p: v * spec.n_accum for p, v in by_prim.items()},
+        )
     if spec.overlap == "ring":
         buckets = plan_bucket_sizes(
             total_words, spec.bucket_words or total_words

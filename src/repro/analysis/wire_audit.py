@@ -6,6 +6,11 @@ Rules (W = wire; violations carry these ids):
         collective over the data-parallel axes. Scalar loss/metric
         reductions (≤ ``scalar_allowance`` elements) are allowed; ZeRO-1's
         bf16 param all-gathers are a gather, not a reduce, and are exempt.
+        Integer GATHERS above the allowance are wire payload and must be
+        declared: allowed only when the spec's codec transport is "gather"
+        (TopKInt's idx/vals planes) or overlap is "ring" (the ring route
+        finishes with an integer all-gather); otherwise they are flagged
+        as undeclared wire traffic.
   W002  wire range safety — every integer operand of a reducing dp-axis
         collective is *provably bounded* by the forward interval pass, fits
         its transport lane after the n-worker sum, and the declared
@@ -51,8 +56,9 @@ __all__ = [
 ]
 
 RULES = {
-    "W001": "no float operand on a reducing dp-axis collective "
-            "(scalar reductions ≤ allowance exempt; gathers exempt)",
+    "W001": "no float operand on a reducing dp-axis collective; integer "
+            "gathers only when the spec declares a gather-transport codec "
+            "or the ring route (float gathers exempt)",
     "W002": "integer wire operands provably bounded; §5.1 guard-bit chain "
             "proof holds for declared AND jaxpr-observed clip bounds",
     "W003": "packed fused route: unpacked integer image never "
@@ -85,7 +91,7 @@ class WireSpec:
     axis_sizes: Dict[str, int]  # ALL mesh axes (collective scaling)
     n_workers: int
     n_accum: int = 1
-    wire_kind: str = "dense"  # "dense" | "packed"
+    wire_kind: str = "dense"  # "dense" | "packed" | "topk"
     bits: int = 32
     use_kernels: bool = False
     fused: bool = False
@@ -99,11 +105,19 @@ class WireSpec:
     leaf_sizes: Tuple[int, ...] = ()
     overlap: str = "off"
     bucket_words: int = 0
+    # sparse/multi-plane declaration (PR 10) — ``wire_transport`` is the
+    # codec's declared collective shape ("psum" | "gather"); ``topk_k`` is
+    # the per-leaf selection size for kind "topk" (0 otherwise).
+    wire_transport: str = "psum"
+    topk_k: int = 0
 
     @property
     def lim(self) -> int:
-        """Declared §5.1 clip limit for the n·M accumulated sum."""
-        return iv.safe_clip_limit(self.n_workers * self.n_accum, self.bits)
+        """Declared clip limit for this codec: the §5.1 n·M-divided bound
+        for summing transports, the full int-range for gather kinds."""
+        return iv.declared_clip_limit(
+            self.wire_kind, self.n_workers * self.n_accum, self.bits
+        )
 
     @property
     def dp_sizes(self) -> Tuple[int, ...]:
@@ -149,6 +163,8 @@ def spec_for_step(layout, wf, *, n_accum: int = 1, fused: bool = False) -> WireS
         leaf_sizes=leaf_sizes,
         overlap=getattr(ctx, "overlap", "off"),
         bucket_words=int(getattr(ctx, "bucket_words", 0)),
+        wire_transport=str(getattr(wf, "transport", "psum")),
+        topk_k=int(getattr(wf, "k", 0)),
     )
 
 
@@ -366,7 +382,45 @@ def audit_jaxpr(
             continue  # model/sp-axis collective: TP floats are by design
         stats["dp_collectives"] += 1
         if name not in jw.REDUCING_COLLECTIVES:
-            continue  # gathers move data, they don't combine it
+            # A non-reducing dp collective (all-gather) moves data without
+            # combining it. Float gathers stay exempt — ZeRO-1's bf16 param
+            # all-gathers are legitimate non-wire traffic. INTEGER gathers
+            # above the scalar allowance ARE wire payload, though, and must
+            # be declared: either the codec's transport is "gather"
+            # (TopKInt's idx/vals planes) or the ring route's finishing
+            # all_gather under overlap="ring". Declared gather operands
+            # join wire_roots (so the observed-clip re-proof covers their
+            # upstream clamps) but carry NO boundedness requirement —
+            # nothing sums on a gather wire, two's-complement fields are
+            # lossless, and the decode-side scatter-add bound is the chain
+            # proof's image_sum check.
+            gather_declared = (
+                spec.wire_transport == "gather" or spec.overlap == "ring"
+            )
+            for operand, ival in zip(eqn.invars, ins):
+                aval = getattr(operand, "aval", None)
+                if aval is None or not hasattr(aval, "dtype"):
+                    continue
+                if aval.dtype.kind != "i":
+                    continue
+                nelem = jw.aval_nelem(aval)
+                if nelem <= spec.scalar_allowance:
+                    continue
+                if gather_declared:
+                    stats["int_wire_ops"] += 1
+                    wire_roots.append(operand)
+                else:
+                    violations.append(Violation(
+                        "W001", _fmt_where(eqn, axes),
+                        f"undeclared integer gather: {aval.dtype} tensor of "
+                        f"{nelem} elements rides a {jw.COLLECTIVES[name]} "
+                        f"over dp axes {axes}, but the spec declares a "
+                        f"'{spec.wire_transport}' transport with "
+                        f"overlap='{spec.overlap}' — integer payload on a "
+                        f"gather must come from a gather-transport codec or "
+                        f"the ring route's finishing all-gather",
+                    ))
+            continue
         n_ax = 1
         for a in axes:
             n_ax *= spec.axis_sizes.get(a, 1)

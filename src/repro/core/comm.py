@@ -54,17 +54,31 @@ class CommCtx:
         return coll.psum_tree(x, self.axes)
 
     def psum_wire(self, ints, wf):
-        """Codec-aware integer all-reduce: pack each leaf with the wire
-        format `wf`, sum the transport words across the data-parallel axes
-        (the ONLY thing that crosses the wire), and unpack back to the summed
-        integer image. Returns ``(words_sum, int_sum)`` — the fused update
-        route consumes the words directly, everything else the image.
+        """Codec-aware integer aggregation: pack each leaf with the wire
+        format `wf` into its transport payload (≥1 integer planes), move the
+        payload across the data-parallel axes with the collective shape the
+        codec declares (the ONLY thing that crosses the wire), and unpack
+        back to the summed integer image. Returns ``(words_sum, int_sum)``
+        — the fused update route consumes the words directly, everything
+        else the image.
 
-        With ``overlap="ring"`` the words are cut into fixed-size buckets
-        (repro.wire.bucketing) and each bucket ring-reduced independently;
-        the debucketized word sums are bit-identical to the serial psum's,
-        so everything downstream (decode, fused kernels, parity tests) is
-        agnostic to which transport ran."""
+        ``wf.transport == "psum"`` (dense/packed) sums the word plane on the
+        wire. With ``overlap="ring"`` the words are cut into fixed-size
+        buckets (repro.wire.bucketing) and each bucket ring-reduced
+        independently; the debucketized word sums are bit-identical to the
+        serial psum's, so everything downstream (decode, fused kernels,
+        parity tests) is agnostic to which transport ran.
+
+        ``wf.transport == "gather"`` (sparse codecs) all-gathers the payload
+        instead — a value is only meaningful next to its index plane, so no
+        sum is legal on the wire — and unpack performs the sum by
+        scatter-add. The gather route always rides the bucketed layout (one
+        bucket when overlap is off, ``bucket_words``-sized buckets under
+        "ring" so the gathers interleave with pending compute); the returned
+        ``words_sum`` holds the gathered planes with a leading worker axis.
+        """
+        if getattr(wf, "transport", "psum") == "gather":
+            return self._gather_wire(ints, wf)
         words = jax.tree.map(
             lambda v: wf.pack(v, n_workers=self.n), ints
         )
@@ -85,6 +99,28 @@ class CommCtx:
             ints,
         )
         return words_sum, int_sum
+
+    def _gather_wire(self, ints, wf):
+        """The gather-shaped transport (see :meth:`psum_wire`)."""
+        payload = jax.tree.map(
+            lambda v: wf.pack(v, n_workers=self.n), ints
+        )
+        total = sum(l.size for l in jax.tree.leaves(payload))
+        bucket_words = (
+            self.bucket_words if self.overlap == "ring" else max(total, 1)
+        )
+        manifest = bucketing.plan_buckets(payload, bucket_words=bucket_words)
+        buckets = bucketing.bucketize(payload, manifest)
+        gathered_buckets = coll.allgather_wire_words(
+            buckets, self.axes, self.axis_sizes
+        )
+        gathered = bucketing.debucketize_gathered(gathered_buckets, manifest)
+        int_sum = jax.tree.map(
+            lambda v, p: wf.unpack(p, v.shape, n_summed=self.n),
+            ints,
+            gathered,
+        )
+        return gathered, int_sum
 
     def pmax(self, x):
         return coll.pmax_tree(x, self.axes)

@@ -14,7 +14,10 @@ bytes) used by tests and the paper-table benchmarks.
 Aggregation semantics per family:
 
   * all-reduce compatible (IntSGD, Heuristic IntSGD, PowerSGD, SignSGD, none):
-    the payload is *summed* across workers in one psum;
+    the payload is *summed* across workers in one psum — unless the
+    configured wire codec declares a gather transport (TopKInt's value+index
+    planes), in which case ``CommCtx.psum_wire`` all-gathers the integer
+    payload and the codec's unpack performs the sum by scatter-add;
   * all-gather only (QSGD, NatSGD, TopK): payloads are gathered and each
     worker decodes all n of them — the expensive path the paper's Tables 2/3
     quantify; our roofline benchmark reproduces that comparison from HLO
@@ -180,15 +183,29 @@ class IntSGD(Compressor):
     (``wire``); ``bits``/``use_kernels`` are the legacy shorthand for the
     dense codec and are folded into the default ``DenseInt`` when no codec
     is given explicitly.
+
+    Sparse (gather-transport) codecs drop coordinates, so IntSGD carries an
+    EF21-style error-feedback residual for them: the state becomes
+    ``{"alpha": AlphaState, "ef": residual tree}``, each step encodes
+    ``work = grad + residual`` and feeds back
+    ``residual' = work − local_image/α`` — exactly the per-worker decode
+    error, quantization and sparsification both. Lossless (psum) codecs
+    keep the bare AlphaState and an identical trajectory to before.
     """
 
     name: ClassVar[str] = "intsgd"
-    fused_capable: ClassVar[bool] = True
     alpha_rule: AlphaRule = AlphaMovingAvg()
     bits: int = 32
     stochastic: bool = True
     use_kernels: bool = False  # route encode/pack through Pallas kernels
     wire: WireFormat | None = None
+
+    @property
+    def fused_capable(self) -> bool:  # type: ignore[override]
+        """Delegates to the codec: the fused decode+update route (and the
+        microbatch wire pipelining built on it) needs the wire's fused
+        kernel, which sparse codecs don't have."""
+        return bool(getattr(self.wire_format, "fused_capable", True))
 
     @property
     def blockwise(self) -> bool:
@@ -200,11 +217,32 @@ class IntSGD(Compressor):
             return self.wire
         return DenseInt(bits=self.bits, use_kernels=self.use_kernels)
 
+    @property
+    def _carries_residual(self) -> bool:
+        return getattr(self.wire_format, "transport", "psum") == "gather"
+
+    @staticmethod
+    def _split_state(state):
+        """State -> (alpha_state, residual | None)."""
+        if isinstance(state, dict) and set(state) == {"alpha", "ef"}:
+            return state["alpha"], state["ef"]
+        return state, None
+
     def init(self, params):
-        return self.alpha_rule.init(params)
+        alpha = self.alpha_rule.init(params)
+        if self._carries_residual:
+            ef = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            return {"alpha": alpha, "ef": ef}
+        return alpha
 
     def observe_update(self, state, dx_stats: DxStats):
-        return self.alpha_rule.update(state, dx_stats)
+        alpha, ef = self._split_state(state)
+        alpha = self.alpha_rule.update(alpha, dx_stats)
+        if ef is not None:
+            return {"alpha": alpha, "ef": ef}
+        return alpha
 
     def _alphas(self, state, grads, eta, n, dims: TreeDims | None):
         if dims is None:
@@ -235,16 +273,27 @@ class IntSGD(Compressor):
         sum still fits the value width — without it an int32 wire with
         M > 1 could wrap the int32 accumulator on clip-saturating
         gradients. The transport itself still packs/unpacks with n (only n
-        payloads ride each psum), which the tighter clip keeps safe."""
+        payloads ride each psum), which the tighter clip keeps safe.
+
+        When the codec is sparse the encoded tensor is ``work = grad +
+        residual`` (error feedback); the residual advance itself lives in
+        ``aggregate_wire`` — the pipelined path never reaches here with a
+        sparse codec because its ``fused_capable`` is False."""
         n = ctx.n
         wf = self.wire_format
-        alphas = self._alphas(state, grads, eta, n, dims)
-        akeys = _leaf_keys(fold_worker_key(key, ctx), grads)
+        alpha_state, ef = self._split_state(state)
+        work = grads
+        if ef is not None:
+            work = jax.tree.map(
+                lambda g, r: g.astype(jnp.float32) + r, grads, ef
+            )
+        alphas = self._alphas(alpha_state, work, eta, n, dims)
+        akeys = _leaf_keys(fold_worker_key(key, ctx), work)
         ints = jax.tree.map(
             lambda g, a, k: wf.encode(
                 g, a, k, n_workers=n * n_accum, stochastic=self.stochastic
             ),
-            grads,
+            work,
             alphas,
             akeys,
         )
@@ -263,11 +312,28 @@ class IntSGD(Compressor):
             state, grads, key=key, eta=eta, ctx=ctx, dims=dims
         )
         max_local = coll.pmax(tree_abs_max(ints), ctx.axes)
-        # THE wire: codec-packed integer all-reduce. On TPU this is the ICI
-        # collective carrying only integer transport words — the paper's
+        # THE wire: codec-packed integer aggregation. On TPU this is the ICI
+        # collective carrying only integer transport planes — the paper's
         # INA/all-reduce analog, at bits/8 bytes per coordinate for the
-        # packed codec.
+        # packed codec, or the gathered vals+idx planes for sparse ones.
         words_sum, int_sum = ctx.psum_wire(ints, wf)
+        alpha_state, ef = self._split_state(state)
+        if ef is not None:
+            # EF21 advance: what the wire dropped (or rounded away) of this
+            # worker's work tensor is carried into the next step. local_image
+            # re-derives the transmitted selection from the same ints —
+            # XLA CSEs it against pack's top_k, so no second selection runs.
+            work = jax.tree.map(
+                lambda g, r: g.astype(jnp.float32) + r, grads, ef
+            )
+            local = jax.tree.map(
+                lambda v: wf.local_image(v, n_workers=n), ints
+            )
+            ef = jax.tree.map(
+                lambda w, l, a: w - l.astype(jnp.float32) / a,
+                work, local, alphas,
+            )
+            state = {"alpha": alpha_state, "ef": ef}
         max_int = tree_abs_max(int_sum)
         bits = 1.0 + jnp.ceil(jnp.log2(jnp.maximum(max_int, 1.0) + 1.0))
         payload = _payload_bytes(wf, grads)
@@ -402,6 +468,12 @@ class QSGD(Compressor):
         is_shaped = lambda x: hasattr(x, "shape")
         if self.wire is not None:
             wf = self.wire
+            if getattr(wf, "transport", "psum") == "gather":
+                raise ValueError(
+                    "QSGD's gathered level payload needs a psum-shaped "
+                    "(dense/packed) codec; a gather-transport codec like "
+                    f"{wf.name!r} cannot carry it"
+                )
             if wf.clip_limit(1) < self.levels:
                 raise ValueError(
                     f"wire bits={wf.bits} too narrow for {self.levels} levels"
@@ -690,12 +762,17 @@ class IntDIANA(Compressor):
     """
 
     name: ClassVar[str] = "intdiana"
-    fused_capable: ClassVar[bool] = True
     fused_local_state: ClassVar[bool] = True  # h_local reads the local image
     alpha_rule: AlphaRule = AlphaDiana()
     bits: int = 32
     stochastic: bool = True
     wire: WireFormat | None = None
+
+    @property
+    def fused_capable(self) -> bool:  # type: ignore[override]
+        """Delegates to the codec, like IntSGD: the fused route and the
+        microbatch pipelining need the wire's fused decode+update kernel."""
+        return bool(getattr(self.wire_format, "fused_capable", True))
 
     @property
     def wire_format(self) -> WireFormat:

@@ -324,6 +324,17 @@ def _fused_plan(base_opt: Optimizer, compressor: Compressor) -> str:
     optimizer its Pallas decode+update kernel via ``Optimizer.fused_kernel``
     — any capable pair routes, any other names the missing capability."""
     if not getattr(compressor, "fused_capable", False):
+        wf = getattr(compressor, "wire_format", None)
+        if wf is not None and not getattr(wf, "fused_capable", True):
+            raise ValueError(
+                "fused update routing consumes the summed transport words "
+                f"directly, but wire codec {wf.name!r} has no fused "
+                "decode+update kernel (WireFormat.fused_capable): its "
+                f"gather-transport payload (planes "
+                f"{getattr(wf, 'plane_names', ())!r}) needs a scatter-shaped "
+                "decode — use a psum-transport codec (dense/packed) or "
+                "fused=False"
+            )
         raise ValueError(
             "fused update routing consumes the summed transport words "
             "directly, which needs wire-level aggregation "
@@ -737,13 +748,18 @@ def build_train_step(
         batch_struct,
     )
     # declare the wire contract the static auditor proves the trace against
-    # (float-wire baselines like NoCompression have no codec and no spec)
+    # (float-wire baselines like NoCompression have no codec and no spec).
+    # n_accum is the number of IMAGES that ride the wire per step: M for the
+    # pipelined body, but 1 when the compressor cannot pipeline (not
+    # fused_capable — e.g. a gather-transport codec), because that body
+    # accumulates float grads and aggregates once.
     wf = getattr(compressor, "wire_format", None)
     if wf is not None:
         from repro.analysis.wire_audit import spec_for_step
 
+        n_images = microbatches if compressor.fused_capable else 1
         audit_spec = spec_for_step(
-            layout, wf, n_accum=microbatches, fused=fused
+            layout, wf, n_accum=n_images, fused=fused
         )
     else:
         audit_spec = None

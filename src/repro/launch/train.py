@@ -25,6 +25,7 @@ from repro.models.transformer import init_lm_params
 from repro.optim import adamw, sgd
 from repro.optim.schedules import constant, warmup_wrap
 from repro.parallel.collectives import mesh_from_counts
+from repro.wire import wire_format_names
 from repro.wire.bucketing import DEFAULT_BUCKET_WORDS
 
 
@@ -127,8 +128,8 @@ def main():
                     help="base optimizer; both ride the fused Pallas "
                          "decode+update route under --fused")
     ap.add_argument("--wire", default=None,
-                    help="wire codec for the integer gradient transport "
-                         "(dense8/dense16/dense32/packed4/packed8/packed16)")
+                    help="wire codec for the integer gradient transport: "
+                         + ", ".join(wire_format_names()))
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--data", type=int, default=1)

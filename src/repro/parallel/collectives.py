@@ -254,6 +254,35 @@ def psum_wire_words_bucketed(buckets, axes, sizes):
     return [_one(b) for b in buckets]
 
 
+def allgather_wire_words(payload, axes, sizes):
+    """Integer all-gather of a transport payload tree — the gather-shaped
+    wire primitive (sparse codecs: value + index planes that must arrive
+    intact because no cross-worker sum is meaningful on the wire).
+
+    Same structural floatless-wire guard as :func:`psum_wire_words`; every
+    plane comes back with a flat leading worker axis of size prod(sizes),
+    ordered to match :func:`linear_axis_index` (row-major over `axes`, the
+    same order :func:`all_gather_flat` uses). A size-1 axis short-circuits
+    in Python and emits nothing, mirroring :func:`ring_allreduce_int` — the
+    static transport model (`traffic.plan_transport`, gather branch) counts
+    exactly the eqns emitted here.
+    """
+    _check_wire_dtypes(payload)
+    pairs = tuple((ax, s) for ax, s in zip(axes, sizes))
+    n = 1
+    for _, s in pairs:
+        n *= s
+
+    def _one(v):
+        out = v
+        for ax, s in reversed(pairs):
+            if s > 1:
+                out = lax.all_gather(out, ax)
+        return out.reshape((n,) + v.shape)
+
+    return jax.tree.map(_one, payload)
+
+
 def pmax_tree(x, axes):
     return jax.tree.map(lambda v: lax.pmax(v, axes), x)
 

@@ -79,22 +79,46 @@ def plan_after_failures(
         gb = global_batch * n_dp // dp
         note = f"global batch rescaled {global_batch}->{gb}; lr should scale by {n_dp}/{dp}"
     if wire is not None:
-        from repro.wire import make_wire_format
+        from repro.wire import WireRangeError, make_wire_format
 
         wf = make_wire_format(wire)
-        # raises WireRangeError at PLAN time if int{bits} cannot carry the
-        # accumulated sum over the surviving n_dp workers x M microbatches
-        lim_new = wf.clip_limit(n_dp * microbatches)
-        try:
-            lim_old = wf.clip_limit(dp * microbatches)
-            delta = f"clip limit {lim_old}->{lim_new}"
-        except Exception:  # the OLD count was itself out of range
-            delta = f"clip limit ->{lim_new} (previous n_dp={dp} was invalid)"
         mb = f" x{microbatches} microbatches" if microbatches > 1 else ""
-        note += (
-            f"; wire {wf.name}{wf.bits} revalidated for n_dp'={n_dp}{mb} "
-            f"({delta})"
-        )
+        if getattr(wf, "transport", "psum") == "gather":
+            # A gather-transport codec (TopKInt) never divides its clip by
+            # n, so clip_limit cannot degenerate — the n-dependent bound
+            # moved to the DECODE side: unpack scatter-adds up to n_dp·M
+            # full-range values per coordinate into an int32 image. k is
+            # per-leaf and mesh-independent, but the gathered payload and
+            # the image sum both scale with the surviving worker count, so
+            # re-prove the bound here, at plan time, like the psum clip.
+            lim = wf.clip_limit(n_dp * microbatches)
+            worst = n_dp * microbatches * lim
+            int32_max = 2**31 - 1
+            if worst > int32_max:
+                raise WireRangeError(
+                    f"gather wire {wf.name}{wf.bits} cannot decode over "
+                    f"{n_dp} workers{mb}: scatter-added image sum can reach "
+                    f"{worst} > int32 max {int32_max}"
+                )
+            note += (
+                f"; wire {wf.name}{wf.bits}:{wf.k} revalidated for "
+                f"n_dp'={n_dp}{mb} (decoded image sum |Σ| <= {worst} fits "
+                f"int32; k={wf.k} per leaf intact)"
+            )
+        else:
+            # raises WireRangeError at PLAN time if int{bits} cannot carry
+            # the accumulated sum over the surviving n_dp workers x M
+            # microbatches
+            lim_new = wf.clip_limit(n_dp * microbatches)
+            try:
+                lim_old = wf.clip_limit(dp * microbatches)
+                delta = f"clip limit {lim_old}->{lim_new}"
+            except Exception:  # the OLD count was itself out of range
+                delta = f"clip limit ->{lim_new} (previous n_dp={dp} was invalid)"
+            note += (
+                f"; wire {wf.name}{wf.bits} revalidated for n_dp'={n_dp}{mb} "
+                f"({delta})"
+            )
     return ElasticPlan(
         n_dp=n_dp, tp=tp, retired_replicas=retired, global_batch=gb, note=note
     )

@@ -54,8 +54,13 @@ def straggler_tolerant_sum(
     wire is ``wf.pack(0)`` — for PackedInt the pure guard-bit bias word,
     whose contribution ``unpack(..., n_summed=ctx.n)`` subtracts exactly
     (every one of the n workers' bias terms entered the word sum, alive or
-    not). The transport stays structurally floatless: the psum routes
-    through ``CommCtx.psum_wire`` like every other wire reduction.
+    not). For a gather-transport codec (TopKInt) the masked image's top-k
+    selects zero values at indices 0..k-1 — a well-formed, non-empty payload
+    whose scatter-add contributes exactly nothing, so the partial decode is
+    bit-exact without special-casing the dead worker's index plane. The
+    transport stays structurally floatless either way: it routes through
+    ``CommCtx.psum_wire``, which dispatches on the codec's declared
+    collective shape like every other wire aggregation.
     """
     wf = DenseInt(bits=32) if wf is None else wf
     a = alive.astype(jnp.int32)

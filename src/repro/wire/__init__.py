@@ -1,5 +1,6 @@
 """Pluggable wire-codec subsystem: everything between rounded integers and
-the psum. See :mod:`repro.wire.base` for the WireFormat contract.
+the transport collective. See :mod:`repro.wire.base` for the WireFormat
+contract (psum- and gather-shaped payloads).
 
 Registry names accepted everywhere a codec can be configured
 (``make_compressor(..., wire=...)``, ``build_train_step(..., wire=...)``,
@@ -7,33 +8,71 @@ Registry names accepted everywhere a codec can be configured
 
     dense4 / dense8 / dense16 / dense32 — one native lane per coordinate
     packed4 / packed8 / packed16        — bit-packed int32 transport words
+    topk8:<k> / topk16:<k>              — top-k values + index plane (gather)
     logged:<name>                       — byte-metering wrapper around <name>
+
+``WIRE_FORMATS``/``PARAMETRIC_WIRE_FORMATS`` are the single registry; the
+CLI ``--wire`` help, the unknown-name error, and the analysis matrix sweep
+all read :func:`wire_format_names` instead of hand-maintaining lists.
 """
 from __future__ import annotations
 
-from repro.wire.base import WireFormat, WireRangeError
+from repro.wire.base import WireFormat, WireRangeError, payload_nbytes
 from repro.wire.bucketing import (
     BucketManifest,
     bucketize,
     debucketize,
+    debucketize_gathered,
     plan_buckets,
 )
 from repro.wire.dense import DenseInt
 from repro.wire.logged import Logged
 from repro.wire.packed import PackedInt
+from repro.wire.topk import TopKInt
 
 __all__ = [
     "WireFormat",
     "WireRangeError",
     "DenseInt",
     "PackedInt",
+    "TopKInt",
     "Logged",
     "BucketManifest",
     "bucketize",
     "debucketize",
+    "debucketize_gathered",
     "plan_buckets",
+    "payload_nbytes",
     "make_wire_format",
+    "wire_format_names",
+    "WIRE_FORMATS",
+    "PARAMETRIC_WIRE_FORMATS",
 ]
+
+# The one registry. Fixed names map to zero-arg factories; parametric names
+# take a ":<k>" suffix and map to int-arg factories.
+WIRE_FORMATS = {
+    "dense4": lambda: DenseInt(bits=4),
+    "dense8": lambda: DenseInt(bits=8),
+    "dense16": lambda: DenseInt(bits=16),
+    "dense32": lambda: DenseInt(bits=32),
+    "packed4": lambda: PackedInt(bits=4),
+    "packed8": lambda: PackedInt(bits=8),
+    "packed16": lambda: PackedInt(bits=16),
+}
+
+PARAMETRIC_WIRE_FORMATS = {
+    "topk8": lambda k: TopKInt(bits=8, k=k),
+    "topk16": lambda k: TopKInt(bits=16, k=k),
+}
+
+
+def wire_format_names():
+    """Every accepted codec name, parametric ones shown with their suffix —
+    the list the CLI help and the unknown-name error both print."""
+    return sorted(WIRE_FORMATS) + sorted(
+        f"{p}:<k>" for p in PARAMETRIC_WIRE_FORMATS
+    )
 
 
 def make_wire_format(name):
@@ -42,15 +81,18 @@ def make_wire_format(name):
         return name  # already a codec
     if name.startswith("logged:"):
         return Logged(make_wire_format(name[len("logged:"):]))
-    reg = {
-        "dense4": lambda: DenseInt(bits=4),
-        "dense8": lambda: DenseInt(bits=8),
-        "dense16": lambda: DenseInt(bits=16),
-        "dense32": lambda: DenseInt(bits=32),
-        "packed4": lambda: PackedInt(bits=4),
-        "packed8": lambda: PackedInt(bits=8),
-        "packed16": lambda: PackedInt(bits=16),
-    }
-    if name not in reg:
-        raise ValueError(f"unknown wire format {name!r}; options {sorted(reg)}")
-    return reg[name]()
+    if name in WIRE_FORMATS:
+        return WIRE_FORMATS[name]()
+    prefix, sep, arg = name.partition(":")
+    if sep and prefix in PARAMETRIC_WIRE_FORMATS:
+        try:
+            k = int(arg)
+        except ValueError:
+            raise ValueError(
+                f"unknown wire format {name!r}: {prefix}:<k> needs an "
+                f"integer k, got {arg!r}"
+            ) from None
+        return PARAMETRIC_WIRE_FORMATS[prefix](k)
+    raise ValueError(
+        f"unknown wire format {name!r}; options {wire_format_names()}"
+    )

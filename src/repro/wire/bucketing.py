@@ -10,20 +10,27 @@ k-1) is still pending.
 
 The mapping is purely structural and exactly invertible::
 
-    bucketize   : words tree -> [bucket_0, ..., bucket_{B-1}]   (1-D, fixed
-                  ``bucket_words`` each except a ragged tail)
-    debucketize : buckets    -> words tree                      (bit-exact)
+    bucketize            : payload tree -> [bucket_0, ..., bucket_{B-1}]
+                           (1-D, fixed ``bucket_words`` each, ragged tail)
+    debucketize          : buckets      -> payload tree          (bit-exact)
+    debucketize_gathered : gathered (n, s) buckets -> payload tree with a
+                           leading worker axis per plane         (bit-exact)
 
-with the :class:`BucketManifest` (all-static: treedef, per-leaf shapes,
-offsets, bucket sizes) recording how to invert. No value ever changes — the
-manifest is slicing bookkeeping, so the bucketed route transports exactly the
-same words as the serial route (zero byte inflation; the parity guarantee of
-the overlap contract reduces to the exactness of integer addition).
+with the :class:`BucketManifest` (all-static: treedef, per-plane shapes,
+offsets, bucket sizes) recording how to invert. A payload tree's leaves are
+its transport PLANES — one word plane per parameter leaf for psum codecs, or
+several named planes (vals + idx) per leaf for gather codecs; the manifest's
+``leaf_planes`` records which plane each flattened leaf is, so the
+multi-plane payload inverts exactly through the same slicing. No value ever
+changes — the manifest is bookkeeping, so the bucketed route transports
+exactly the same words as the serial route (zero byte inflation; the parity
+guarantee of the overlap contract reduces to the exactness of integer
+addition on the psum route and of concatenation/slicing on the gather one).
 
-Every leaf of one codec shares a single transport dtype (int32 words for
-PackedInt, one narrow lane dtype for DenseInt), which is what makes the
-cross-leaf concatenation legal; a mixed-dtype tree is a configuration error
-and raises.
+Every plane of one codec shares a single transport dtype (int32 words for
+PackedInt and both TopKInt planes, one narrow lane dtype for DenseInt),
+which is what makes the cross-leaf concatenation legal; a mixed-dtype tree
+is a configuration error and raises.
 """
 from __future__ import annotations
 
@@ -34,7 +41,13 @@ from typing import Any, List, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BucketManifest", "plan_buckets", "bucketize", "debucketize"]
+__all__ = [
+    "BucketManifest",
+    "plan_buckets",
+    "bucketize",
+    "debucketize",
+    "debucketize_gathered",
+]
 
 DEFAULT_BUCKET_WORDS = 1 << 16  # 256 KiB of int32 words per bucket
 
@@ -43,10 +56,14 @@ DEFAULT_BUCKET_WORDS = 1 << 16  # 256 KiB of int32 words per bucket
 class BucketManifest:
     """Static inversion record for one (words tree, bucket_words) pairing.
 
-    ``leaf_shapes``/``leaf_sizes`` follow ``treedef``'s flatten order;
-    ``bucket_sizes`` lists each bucket's word count (all ``bucket_words``
-    except possibly the ragged last). ``total_words`` is their sum — exactly
-    the serial route's word count, pinned by :mod:`benchmarks.bench_overlap`.
+    ``leaf_shapes``/``leaf_sizes``/``leaf_planes`` follow ``treedef``'s
+    flatten order — ``leaf_planes[i]`` names the transport plane leaf ``i``
+    is ("words" for a psum codec's single plane; "vals"/"idx"/... keyed off
+    the payload dict for gather codecs), and ``leaf_offsets[i]`` is its word
+    offset into the concatenated flat payload. ``bucket_sizes`` lists each
+    bucket's word count (all ``bucket_words`` except possibly the ragged
+    last). ``total_words`` is their sum — exactly the serial route's word
+    count, pinned by :mod:`benchmarks.bench_overlap`.
     """
 
     treedef: Any
@@ -55,10 +72,20 @@ class BucketManifest:
     dtype: Any
     bucket_words: int
     bucket_sizes: Tuple[int, ...]
+    leaf_planes: Tuple[str, ...] = ()
 
     @property
     def n_buckets(self) -> int:
         return len(self.bucket_sizes)
+
+    @property
+    def leaf_offsets(self) -> Tuple[int, ...]:
+        """Word offset of each plane in the concatenated flat payload."""
+        offs, off = [], 0
+        for size in self.leaf_sizes:
+            offs.append(off)
+            off += size
+        return tuple(offs)
 
     @property
     def total_words(self) -> int:
@@ -94,12 +121,49 @@ class BucketManifest:
                 words += n * (-(-s // n))
         return n_eqns, words * itemsize
 
+    def gather_collectives(self, dp_sizes) -> Tuple[int, int]:
+        """``(n_eqns, operand_bytes)`` the gather transport emits for ONE
+        image of this manifest: per bucket of ``s`` words,
+        ``allgather_wire_words`` issues one ``all_gather`` per dp axis of
+        size > 1 in REVERSED axis order, each eqn's operand being the bucket
+        already grown by every previously gathered axis (a size-1 axis
+        short-circuits in Python and emits nothing).
+
+        Runtime counterpart of the static gather branch of
+        :func:`repro.analysis.traffic.plan_transport`; tests pin the two
+        equal, mirroring :meth:`ring_collectives` for the psum route."""
+        itemsize = jnp.dtype(self.dtype).itemsize
+        sizes = [n for n in dp_sizes if n > 1]
+        n_eqns = 0
+        words = 0
+        for s in self.bucket_sizes:
+            grown = s
+            for n in reversed(sizes):
+                n_eqns += 1
+                words += grown
+                grown *= n
+        return n_eqns, words * itemsize
+
+
+def _plane_label(path) -> str:
+    """Plane name of one flattened payload leaf: the innermost dict key of
+    its tree path (gather codecs pack {"vals": ..., "idx": ...} per leaf),
+    else the psum codec's single implicit "words" plane."""
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return "words"
+
 
 def plan_buckets(words_tree, *, bucket_words: int = DEFAULT_BUCKET_WORDS) -> BucketManifest:
-    """Derive the manifest from a (concrete or abstract) transport-word tree."""
+    """Derive the manifest from a (concrete or abstract) transport payload
+    tree — the leaves are the codec's planes, labelled via their tree path."""
     if bucket_words <= 0:
         raise ValueError(f"bucket_words must be positive, got {bucket_words}")
-    leaves, treedef = jax.tree.flatten(words_tree)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(words_tree)
+    leaves = [l for _, l in paths_leaves]
+    planes = tuple(_plane_label(p) for p, _ in paths_leaves)
     if not leaves:
         raise ValueError("cannot bucket an empty transport tree")
     dtypes = {jnp.dtype(l.dtype) for l in leaves}
@@ -119,6 +183,7 @@ def plan_buckets(words_tree, *, bucket_words: int = DEFAULT_BUCKET_WORDS) -> Buc
         dtype=dtypes.pop(),
         bucket_words=bucket_words,
         bucket_sizes=bucket_sizes,
+        leaf_planes=planes,
     )
 
 
@@ -143,5 +208,25 @@ def debucketize(buckets: List[jax.Array], manifest: BucketManifest):
     leaves, off = [], 0
     for shape, size in zip(manifest.leaf_shapes, manifest.leaf_sizes):
         leaves.append(flat[off : off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(manifest.treedef, leaves)
+
+
+def debucketize_gathered(buckets: List[jax.Array], manifest: BucketManifest):
+    """Invert :func:`bucketize` on GATHERED buckets — each arrives as
+    ``(n_workers, bucket_size)`` — yielding the payload tree with a leading
+    worker axis on every plane (what a gather codec's unpack consumes).
+
+    Per worker row this is exactly :func:`debucketize`; no value changes.
+    """
+    if len(buckets) != manifest.n_buckets:
+        raise ValueError(
+            f"manifest expects {manifest.n_buckets} buckets, got {len(buckets)}"
+        )
+    n = int(buckets[0].shape[0])
+    flat = jnp.concatenate([b.reshape(n, -1) for b in buckets], axis=1)
+    leaves, off = [], 0
+    for shape, size in zip(manifest.leaf_shapes, manifest.leaf_sizes):
+        leaves.append(flat[:, off : off + size].reshape((n,) + tuple(shape)))
         off += size
     return jax.tree.unflatten(manifest.treedef, leaves)

@@ -1,11 +1,16 @@
 """Logged — transparent wrapper metering exact collective bytes.
 
-Wraps any WireFormat and counts, at trace time, the exact transport-word
-bytes every pack/unpack call would put on (take off) the collective, plus
-call counts per leaf shape. Because compressors treat the codec as static
-Python state closed over by the step, one traced step records one step's
-exact wire traffic — which is precisely what the comm-volume benchmarks
-need, with no device work added (values pass through untouched).
+Wraps any WireFormat and counts, at trace time, the exact payload bytes
+every pack/unpack call would put on (take off) the collective, plus call
+counts per leaf shape. Bytes are tree-summed over the payload's planes, so
+the meter is transport-shape agnostic: a psum codec's single word plane and
+a gather codec's vals+idx planes count the same way — and on the gather
+route ``unpack_bytes`` naturally meters the n_workers× amplification of the
+gathered planes, not just the one-worker psum payload. Because compressors
+treat the codec as static Python state closed over by the step, one traced
+step records one step's exact wire traffic — which is precisely what the
+comm-volume benchmarks need, with no device work added (values pass through
+untouched).
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ from typing import Tuple
 
 import jax
 
-from repro.wire.base import WireFormat
+from repro.wire.base import WireFormat, payload_nbytes
 
 
 class Logged:
@@ -45,6 +50,18 @@ class Logged:
     def bits(self) -> int:
         return self.inner.bits
 
+    @property
+    def transport(self) -> str:
+        return getattr(self.inner, "transport", "psum")
+
+    @property
+    def plane_names(self):
+        return getattr(self.inner, "plane_names", ("words",))
+
+    @property
+    def fused_capable(self) -> bool:
+        return getattr(self.inner, "fused_capable", True)
+
     def clip_limit(self, n_workers: int) -> int:
         return self.inner.clip_limit(n_workers)
 
@@ -56,16 +73,19 @@ class Logged:
     def decode(self, ints, alpha, *, n_workers):
         return self.inner.decode(ints, alpha, n_workers=n_workers)
 
-    def pack(self, ints: jax.Array, *, n_workers: int) -> jax.Array:
+    def pack(self, ints: jax.Array, *, n_workers: int):
         words = self.inner.pack(ints, n_workers=n_workers)
-        self.pack_bytes += words.size * words.dtype.itemsize
+        self.pack_bytes += payload_nbytes(words)
         self.calls[("pack", tuple(ints.shape))] += 1
         return words
 
-    def unpack(self, words: jax.Array, shape: Tuple[int, ...], *, n_summed: int):
-        self.unpack_bytes += words.size * words.dtype.itemsize
+    def unpack(self, words, shape: Tuple[int, ...], *, n_summed: int):
+        self.unpack_bytes += payload_nbytes(words)
         self.calls[("unpack", tuple(shape))] += 1
         return self.inner.unpack(words, shape, n_summed=n_summed)
+
+    def local_image(self, ints, *, n_workers):
+        return self.inner.local_image(ints, n_workers=n_workers)
 
     def wire_bytes(self, size: int) -> int:
         return self.inner.wire_bytes(size)

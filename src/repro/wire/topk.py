@@ -1,0 +1,178 @@
+"""TopKInt — sparse integer wire: top-k value plane + index plane.
+
+The dense codecs spend one `bits`-wide field per coordinate, so packed8's 4×
+is their floor. The paper's adaptive α drives most integer fields to zero,
+which is exactly where sparsification pays: keep only the k
+largest-magnitude integers per leaf and ship them as TWO planes —
+
+    vals : k two's-complement `bits`-wide fields packed into int32 words
+    idx  : k int32 flat coordinates positioning them
+
+A value is only meaningful next to its index, so no cross-worker sum may
+happen on the wire: the payload rides the gather transport
+(``transport = "gather"``), every worker's planes arrive intact, and
+:meth:`unpack` performs the sum itself by scatter-adding each worker's
+contribution into a dense int32 image. Three consequences fall out:
+
+* The §5.1 clip no longer divides by n — :meth:`clip_limit` returns the full
+  signed range of the value width. The decode-side image sum n·M·lim must
+  fit int32 instead, which is the ``image-overflow`` check of the "topk"
+  :func:`repro.analysis.intervals.wire_chain_proof` kind.
+* Value fields carry plain two's complement (no guard-bit bias): nothing is
+  ever added field-to-field in the packed representation, so sign-extension
+  on unpack is exact for any clipped value.
+* A dead worker's masked (all-zero) image selects zero values at indices
+  0..k-1 — its scatter-add contributes exactly nothing, so the straggler
+  route decodes bit-exactly without special-casing the empty payload.
+
+Selection is deterministic: ``lax.top_k`` on |ints| breaks ties toward the
+lower flat index (pinned by tests/test_topk.py), so every worker, every
+re-trace, and the error-feedback residual all agree on the mask.
+
+Dropping coordinates is lossy; compressors compensate with an EF21-style
+error-feedback residual (see ``IntSGD``), computed against
+:meth:`local_image` — the same selection pack performs, kept as an explicit
+method so the residual never needs to unpack its own payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import WireFormat, _INT_RANGE
+
+__all__ = ["TopKInt"]
+
+_ALLOWED_BITS = (8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKInt(WireFormat):
+    """Top-k sparse codec: ``k`` per-leaf survivors on a gather wire."""
+
+    name: ClassVar[str] = "topk"
+    transport: ClassVar[str] = "gather"
+    plane_names: ClassVar[Tuple[str, ...]] = ("idx", "vals")
+    fused_capable: ClassVar[bool] = False  # no fused scatter-decode kernel
+
+    bits: int = 8
+    k: int = 64
+
+    def __post_init__(self):
+        if self.bits not in _ALLOWED_BITS:
+            raise ValueError(
+                f"topk packs {self.bits}-bit values into int32 words; "
+                f"supported widths are {_ALLOWED_BITS}"
+            )
+        if self.k < 1:
+            raise ValueError(f"topk needs k >= 1, got {self.k}")
+
+    # ---- static geometry ------------------------------------------------
+    @property
+    def fields(self) -> int:
+        """Value fields per int32 word of the vals plane."""
+        return 32 // self.bits
+
+    def k_eff(self, size: int) -> int:
+        """Survivors for a `size`-coordinate leaf: min(k, size), so small
+        leaves (biases, norms) never pay for phantom coordinates."""
+        return min(self.k, int(size))
+
+    # ---- value stages ---------------------------------------------------
+    def clip_limit(self, n_workers: int) -> int:
+        """Full signed range of the value width: the gather wire carries no
+        cross-worker sum, so nothing divides by n. The decode-side image sum
+        (≤ n·M·lim per coordinate) is bounded by the chain proof instead."""
+        del n_workers
+        return _INT_RANGE[self.bits]
+
+    def encode(self, x, alpha, key, *, n_workers, stochastic=True):
+        """Int(α ∘ x) clipped at the FULL value range (see clip_limit).
+
+        Always the jnp path: the Pallas ``int_compress`` kernel bakes in the
+        psum-shaped n-divided clip, which would needlessly narrow the sparse
+        wire's values; selection (top_k) dominates the encode cost anyway.
+        """
+        lim = self.clip_limit(n_workers)
+        from repro.core import rounding  # lazy: core imports this package
+
+        r = rounding.int_round(
+            x.astype(jnp.float32) * alpha, key, stochastic=stochastic
+        )
+        return jnp.clip(r, -lim, lim).astype(jnp.int32)
+
+    # ---- transport stages -----------------------------------------------
+    def _select(self, ints: jax.Array):
+        """Deterministic top-k by |value|: (idx, vals), ties -> lower index."""
+        flat = ints.reshape(-1).astype(jnp.int32)
+        k = self.k_eff(flat.size)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        idx = idx.astype(jnp.int32)
+        return idx, flat[idx]
+
+    def _pack_vals(self, vals: jax.Array) -> jax.Array:
+        """k clipped values -> ⌈k/fields⌉ int32 words, plain two's
+        complement fields (no bias: nothing sums field-to-field)."""
+        m, b = self.fields, self.bits
+        k = vals.size
+        words_len = -(-k // m)
+        mask = (1 << b) - 1
+        padded = jnp.zeros((words_len * m,), jnp.int32).at[:k].set(vals & mask)
+        chunks = padded.reshape(m, words_len)
+        word = jnp.zeros((words_len,), jnp.int32)
+        for j in range(m):
+            word = word | (chunks[j] << (j * b))
+        return word
+
+    def _unpack_vals(self, words: jax.Array, k: int) -> jax.Array:
+        """Inverse of _pack_vals over a leading batch axis: (..., W) int32
+        words -> (..., k) sign-extended int32 values."""
+        m, b = self.fields, self.bits
+        mask = (1 << b) - 1
+        sign = 1 << (b - 1)
+        cols = [(words >> (j * b)) & mask for j in range(m)]
+        fields = jnp.concatenate(cols, axis=-1)
+        return ((fields ^ sign) - sign)[..., :k]
+
+    def pack(self, ints: jax.Array, *, n_workers: int):
+        del n_workers  # selection is per-worker; nothing sums on the wire
+        idx, vals = self._select(ints)
+        return {"idx": idx, "vals": self._pack_vals(vals)}
+
+    def unpack(self, payload, shape: Tuple[int, ...], *, n_summed: int):
+        """Gathered payload (planes carry a leading ``n_summed`` worker
+        axis) -> summed integer image, by scatter-add of every worker's
+        sign-extended values at its own indices."""
+        size = int(math.prod(shape)) if shape else 1
+        k = self.k_eff(size)
+        idx = payload["idx"].reshape(n_summed * k)
+        words = payload["vals"].reshape(n_summed, -1)
+        vals = self._unpack_vals(words, k).reshape(n_summed * k)
+        out = jnp.zeros((size,), jnp.int32).at[idx].add(vals)
+        return out.reshape(shape)
+
+    def local_image(self, ints: jax.Array, *, n_workers: int) -> jax.Array:
+        """The top-k-masked image this worker's payload decodes to — exact
+        (pack's two's-complement fields are lossless for clipped values), so
+        the EF residual sees precisely what the wire dropped."""
+        del n_workers
+        flat = ints.reshape(-1).astype(jnp.int32)
+        idx, vals = self._select(ints)
+        return jnp.zeros_like(flat).at[idx].set(vals).reshape(ints.shape)
+
+    def wire_bytes(self, size: int) -> int:
+        k = self.k_eff(size)
+        return 4 * (-(-k // self.fields)) + 4 * k
+
+    def fused_update(self, words, param, opt, scalars, *, kernel, n_summed,
+                     shift=None):
+        raise NotImplementedError(
+            "topk has no fused decode+update kernel: the gather payload "
+            "(vals + idx planes) needs a scatter-shaped decode the fused "
+            "Pallas route does not implement (fused_capable is False); "
+            "run with fused=False"
+        )

@@ -267,13 +267,14 @@ def test_concurrent_dot_makes_collective_hideable():
 # the byte accountant == Logged metering == BucketManifest
 # ---------------------------------------------------------------------------
 ALL_CODECS = ["dense4", "dense8", "dense16", "dense32",
-              "packed4", "packed8", "packed16"]
+              "packed4", "packed8", "packed16",
+              "topk8:32", "topk16:8"]
 
 
-def _meter_logged(kind, bits, leaf_sizes, n, M):
+def _meter_logged(codec, leaf_sizes, n, M):
     """Trace M images' worth of pack calls through a Logged codec and return
     the metered wire bytes (trace only, nothing executed)."""
-    logged = Logged(make_wire_format(f"{kind}{bits}"))
+    logged = Logged(make_wire_format(codec))
 
     def pack_all():
         return [
@@ -286,18 +287,20 @@ def _meter_logged(kind, bits, leaf_sizes, n, M):
     return logged.pack_bytes
 
 
+def _declared_leaf_bytes(wf, size):
+    """The accountant's per-leaf arithmetic for any codec kind."""
+    return tr.payload_bytes(wf.name, wf.bits, size, k=getattr(wf, "k", 0))
+
+
 @pytest.mark.parametrize("codec", ALL_CODECS)
 def test_static_payload_equals_logged_metering(codec):
     wf = make_wire_format(codec)
-    kind = "packed" if "packed" in codec else "dense"
     leaf_sizes, n, M = (129, 64, 7), 4, 2
-    declared = sum(
-        tr.payload_bytes(kind, wf.bits, s) for s in leaf_sizes
-    ) * M
-    assert declared == _meter_logged(kind, wf.bits, leaf_sizes, n, M)
+    declared = sum(_declared_leaf_bytes(wf, s) for s in leaf_sizes) * M
+    assert declared == _meter_logged(codec, leaf_sizes, n, M)
     # and the per-leaf arithmetic IS the codec's own wire_bytes
     for s in leaf_sizes:
-        assert tr.payload_bytes(kind, wf.bits, s) == wf.wire_bytes(s)
+        assert _declared_leaf_bytes(wf, s) == wf.wire_bytes(s)
 
 
 if HAVE_HYPOTHESIS:
@@ -315,11 +318,8 @@ if HAVE_HYPOTHESIS:
         codec, leaf_sizes, n, M
     ):
         wf = make_wire_format(codec)
-        kind = "packed" if "packed" in codec else "dense"
-        declared = sum(
-            tr.payload_bytes(kind, wf.bits, s) for s in leaf_sizes
-        ) * M
-        assert declared == _meter_logged(kind, wf.bits, leaf_sizes, n, M)
+        declared = sum(_declared_leaf_bytes(wf, s) for s in leaf_sizes) * M
+        assert declared == _meter_logged(codec, leaf_sizes, n, M)
 
 
 def test_plan_bucket_sizes_matches_plan_buckets():

@@ -1,0 +1,362 @@
+"""TopKInt — the sparse integer wire: gather-transport round-trips, the
+gather-safety contract (unpack of the stacked payloads == Σ local_image),
+deterministic tie-breaking, the error-feedback residual it feeds, byte
+agreement across the three meters (Logged / BucketManifest / the static
+accountant), and the runtime (straggler / elastic) behavior."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import intervals as iv
+from repro.analysis import traffic as tr
+from repro.core import make_compressor
+from repro.core.comm import CommCtx
+from repro.core.scaling import AlphaState
+from repro.parallel import collectives as coll
+from repro.runtime.elastic import plan_after_failures
+from repro.runtime.straggler import straggler_tolerant_sum
+from repro.wire import (
+    Logged,
+    TopKInt,
+    make_wire_format,
+    payload_nbytes,
+    wire_format_names,
+)
+from repro.wire.base import WireRangeError
+from repro.wire.bucketing import plan_buckets
+
+N = 4
+AXIS = "workers"
+CTX = CommCtx(axes=(AXIS,), axis_sizes=(N,))
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _rand_ints(wf, size, seed, n=1):
+    lim = wf.clip_limit(n)
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (n, size), -lim, lim + 1, dtype=jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# round-trip and the gather-safety contract
+# ---------------------------------------------------------------------------
+def test_single_worker_roundtrip_is_local_image():
+    wf = TopKInt(bits=8, k=5)
+    ints = _rand_ints(wf, 37, 0)[0]
+    payload = wf.pack(ints, n_workers=1)
+    assert set(payload) == {"idx", "vals"}
+    assert payload["idx"].dtype == jnp.int32
+    assert payload["vals"].dtype == jnp.int32
+    stacked = jax.tree.map(lambda p: p[None], payload)
+    back = wf.unpack(stacked, (37,), n_summed=1)
+    np.testing.assert_array_equal(
+        np.asarray(back), np.asarray(wf.local_image(ints, n_workers=1))
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        bits=st.sampled_from([8, 16]),
+        k=st.integers(1, 40),
+        n=st.integers(1, 6),
+        size=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_gather_aggregation_safety(bits, k, n, size, seed):
+        """THE gather-safety contract: unpacking the n stacked payloads
+        equals the elementwise sum of the n workers' top-k-masked images —
+        for any clipped values, including the FULL-range boundary (topk's
+        clip never divides by n) and k > leaf size."""
+        wf = TopKInt(bits=bits, k=k)
+        lim = wf.clip_limit(n)
+        ints = _rand_ints(wf, size, seed, n=n)
+        ints = ints.at[0].set(lim).at[-1].set(-lim)  # saturate both ways
+        payloads = [wf.pack(ints[i], n_workers=n) for i in range(n)]
+        stacked = jax.tree.map(lambda *ps: jnp.stack(ps), *payloads)
+        got = wf.unpack(stacked, (size,), n_summed=n)
+        want = sum(
+            np.asarray(wf.local_image(ints[i], n_workers=n)) for i in range(n)
+        )
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_tie_break_is_lowest_index():
+    """|v| ties resolve toward the LOWER flat index — every worker, every
+    re-trace, and the EF residual must agree on the mask."""
+    wf = TopKInt(bits=8, k=2)
+    ints = jnp.array([3, -5, 5, -5], jnp.int32)
+    img = wf.local_image(ints, n_workers=1)
+    np.testing.assert_array_equal(np.asarray(img), [0, -5, 5, 0])
+
+
+def test_k_caps_at_leaf_size():
+    wf = TopKInt(bits=8, k=64)
+    assert wf.k_eff(3) == 3
+    ints = jnp.array([1, -2, 3], jnp.int32)
+    payload = wf.pack(ints, n_workers=1)
+    assert payload["idx"].shape == (3,)
+    stacked = jax.tree.map(lambda p: p[None], payload)
+    np.testing.assert_array_equal(
+        np.asarray(wf.unpack(stacked, (3,), n_summed=1)), [1, -2, 3]
+    )
+
+
+def test_full_range_clip_and_sign_extension():
+    """clip_limit ignores n (nothing sums on the wire) and the boundary
+    values survive the bit-packed two's-complement fields exactly."""
+    for bits, lim in ((8, 127), (16, 32767)):
+        wf = TopKInt(bits=bits, k=4)
+        assert wf.clip_limit(1) == lim == wf.clip_limit(4096)
+        ints = jnp.array([lim, -lim, 1, -1], jnp.int32)
+        img = wf.local_image(ints, n_workers=1)
+        np.testing.assert_array_equal(np.asarray(img), np.asarray(ints))
+        stacked = jax.tree.map(lambda p: p[None], wf.pack(ints, n_workers=1))
+        np.testing.assert_array_equal(
+            np.asarray(wf.unpack(stacked, (4,), n_summed=1)),
+            np.asarray(ints),
+        )
+
+
+def test_gather_safety_through_real_collective():
+    """Same contract through CommCtx.psum_wire's gather dispatch under the
+    vmap n-worker simulation; the decode also matches a dense int32 psum of
+    the SAME masked images (decode parity on a shared mask)."""
+    wf = TopKInt(bits=8, k=6)
+    ints = _rand_ints(wf, 50, 3, n=N)
+
+    def worker(v):
+        _, s = CTX.psum_wire(v, wf)
+        return s
+
+    got = coll.vmap_workers(worker, in_axes=0)(ints)
+    want = sum(
+        np.asarray(wf.local_image(ints[i], n_workers=N)) for i in range(N)
+    )
+    for row in np.asarray(got):
+        np.testing.assert_array_equal(row, want)
+
+    # dense reference on the same mask
+    masked = jnp.stack([wf.local_image(ints[i], n_workers=N) for i in range(N)])
+
+    def dense_worker(v):
+        return coll.psum(v, (AXIS,))
+
+    dense = coll.vmap_workers(dense_worker, in_axes=0)(masked)
+    np.testing.assert_array_equal(np.asarray(dense[0]), want)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_parses_parametric_names():
+    wf = make_wire_format("topk8:64")
+    assert wf == TopKInt(bits=8, k=64)
+    assert make_wire_format("topk16:5") == TopKInt(bits=16, k=5)
+    assert "topk8:<k>" in wire_format_names()
+    for bad in ("topk8", "topk8:", "topk8:x", "topk8:0", "topk4:8"):
+        with pytest.raises(ValueError):
+            make_wire_format(bad)
+    with pytest.raises(ValueError, match="unknown wire format"):
+        make_wire_format("nope")
+
+
+# ---------------------------------------------------------------------------
+# bytes: Logged metering == manifest == static accountant == wire_bytes
+# ---------------------------------------------------------------------------
+def test_byte_meters_agree_on_gather_route():
+    wf = TopKInt(bits=8, k=16)
+    sizes = (129, 64, 7)
+    tree = {f"l{i}": jnp.zeros((s,), jnp.int32) for i, s in enumerate(sizes)}
+
+    logged = Logged(wf)
+    payload = {k: logged.pack(v, n_workers=N) for k, v in tree.items()}
+    declared = sum(wf.wire_bytes(s) for s in sizes)
+    assert logged.pack_bytes == declared
+    assert payload_nbytes(payload) == declared
+    assert declared == sum(
+        tr.payload_bytes("topk", 8, s, k=16) for s in sizes
+    )
+
+    manifest = plan_buckets(payload)
+    assert manifest.payload_bytes == declared
+    assert set(manifest.leaf_planes) == {"idx", "vals"}
+    # gather collectives: one bucket, one dp axis of size N -> 1 eqn whose
+    # operand is the whole bucket
+    n_eqns, op_bytes = manifest.gather_collectives((N,))
+    assert (n_eqns, op_bytes) == (len(manifest.bucket_sizes), declared)
+
+    # unpack meters the gathered (n x) payload
+    stacked = jax.tree.map(lambda p: jnp.stack([p] * N), payload)
+    for name, leaf in tree.items():
+        logged.unpack(stacked[name], leaf.shape, n_summed=N)
+    assert logged.unpack_bytes == N * declared
+
+
+def test_topk_beats_packed8_bytes_on_large_leaves():
+    """The headline: at k << size the two-plane payload is far below
+    packed8's size/4 words."""
+    wf, packed = TopKInt(bits=8, k=64), make_wire_format("packed8")
+    size = 10_000
+    assert packed.wire_bytes(size) / wf.wire_bytes(size) > 4
+
+
+# ---------------------------------------------------------------------------
+# the EF residual through IntSGD
+# ---------------------------------------------------------------------------
+def _run_round(comp, grads, state=None):
+    if state is None:
+        state = comp.init(jax.tree.map(lambda x: x[0], grads))
+        state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (N,) + jnp.shape(x)), state
+        )
+
+    def worker(s, g):
+        return comp.aggregate(
+            s, g, key=jax.random.PRNGKey(7), eta=jnp.float32(0.1), ctx=CTX
+        )
+
+    return jax.vmap(worker, in_axes=(0, 0), axis_name=AXIS)(state, grads)
+
+
+def test_intsgd_topk_state_carries_residual():
+    comp = make_compressor("intsgd", bits=8, wire="topk8:4", stochastic=False)
+    assert comp.fused_capable is False
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (N, 32))}
+    state0 = comp.init({"w": grads["w"][0]})
+    assert set(state0) == {"alpha", "ef"}
+    assert isinstance(state0["alpha"], AlphaState)
+    np.testing.assert_array_equal(np.asarray(state0["ef"]["w"]), 0.0)
+    # a psum codec keeps the bare AlphaState (identical trajectory to seed)
+    dense = make_compressor("intsgd", bits=8, wire="packed8")
+    assert isinstance(dense.init({"w": grads["w"][0]}), AlphaState)
+    assert dense.fused_capable is True
+
+
+def test_intsgd_topk_residual_is_what_the_wire_dropped():
+    """After one round, ef == work − local_image/α per worker — quantization
+    AND sparsification error, both measured against the codec's own mask."""
+    comp = make_compressor("intsgd", bits=8, wire="topk8:4", stochastic=False)
+    wf = comp.wire_format
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (N, 32))}
+    state = comp.init({"w": grads["w"][0]})
+    state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (N,) + jnp.shape(x)), state
+    )
+    # warm α so the encode is non-degenerate
+    state["alpha"] = AlphaState(
+        r=jnp.full((N,), 1e-2), step=jnp.ones((N,), jnp.int32)
+    )
+    ghat, new_state, _ = _run_round(comp, grads, state)
+    assert set(new_state) == {"alpha", "ef"}
+    for i in range(N):
+        s_i = jax.tree.map(lambda x: x[i], state)
+        work = grads["w"][i]  # first round: ef == 0
+        alphas = comp._alphas(
+            s_i["alpha"], {"w": work}, jnp.float32(0.1), N, None
+        )
+        ints = wf.encode(
+            work, alphas["w"], None, n_workers=N, stochastic=False
+        )
+        local = wf.local_image(ints, n_workers=N)
+        want_ef = work - local.astype(jnp.float32) / alphas["w"]
+        np.testing.assert_allclose(
+            np.asarray(new_state["ef"]["w"][i]), np.asarray(want_ef),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+def test_intsgd_topk_decode_is_sum_of_local_images():
+    comp = make_compressor("intsgd", bits=8, wire="topk8:8", stochastic=False)
+    wf = comp.wire_format
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (N, 24))}
+    state = comp.init({"w": grads["w"][0]})
+    state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (N,) + jnp.shape(x)), state
+    )
+    state["alpha"] = AlphaState(
+        r=jnp.full((N,), 1e-2), step=jnp.ones((N,), jnp.int32)
+    )
+    ghat, _, _ = _run_round(comp, grads, state)
+    s0 = jax.tree.map(lambda x: x[0], state)
+    alphas = comp._alphas(
+        s0["alpha"], {"w": grads["w"][0]}, jnp.float32(0.1), N, None
+    )
+    total = sum(
+        np.asarray(wf.local_image(
+            wf.encode(grads["w"][i], alphas["w"], None, n_workers=N,
+                      stochastic=False),
+            n_workers=N,
+        ))
+        for i in range(N)
+    )
+    want = total.astype(np.float32) / (N * np.asarray(alphas["w"]))
+    np.testing.assert_allclose(
+        np.asarray(ghat["w"][0]), want, rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# runtime: straggler exactness and elastic revalidation
+# ---------------------------------------------------------------------------
+def test_straggler_dead_worker_contributes_exact_zero():
+    wf = TopKInt(bits=8, k=6)
+    ints = _rand_ints(wf, 40, 5, n=N)
+    alive = jnp.array([True, True, False, True])
+
+    def worker(v, a):
+        s, n_live = straggler_tolerant_sum(v, a, CTX, wf)
+        return s, n_live
+
+    got, n_live = coll.vmap_workers(worker, in_axes=(0, 0))(ints, alive)
+    assert int(n_live[0]) == 3
+    want = sum(
+        np.asarray(wf.local_image(ints[i], n_workers=N))
+        for i in range(N)
+        if bool(alive[i])
+    )
+    np.testing.assert_array_equal(np.asarray(got[0]), want)
+
+
+def test_elastic_revalidates_topk_decode_bound():
+    plan = plan_after_failures(
+        dp=4, tp=1, failed_devices=[3], global_batch=32, wire="topk16:32"
+    )
+    assert plan.n_dp == 3
+    assert "revalidated" in plan.note and "k=32" in plan.note
+    # n'·M·lim must fit int32: 70000 survivors x 32767 overflows
+    with pytest.raises(WireRangeError, match="int32"):
+        plan_after_failures(
+            dp=70_001, tp=1, failed_devices=[0], global_batch=70_001,
+            wire="topk16:32",
+        )
+
+
+# ---------------------------------------------------------------------------
+# static layer: chain proof and fused gating
+# ---------------------------------------------------------------------------
+def test_chain_proof_topk_kind():
+    proof = iv.wire_chain_proof("topk", 8, 4, 2)
+    assert not proof.violations
+    assert proof.lim == 127  # full range: the clip never divides by n·M
+    # decode-side bound: n·M·32767 past int32 must be a violation
+    bad = iv.wire_chain_proof("topk", 16, 70_000, 1)
+    assert any("image" in c for c, _ in bad.violations), bad.violations
+
+
+def test_fused_route_is_gated_off():
+    wf = TopKInt(bits=8, k=4)
+    assert wf.fused_capable is False
+    with pytest.raises(NotImplementedError, match="fused_capable"):
+        wf.fused_update(None, None, None, None, kernel=None, n_summed=N)
